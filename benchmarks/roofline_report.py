@@ -1,0 +1,30 @@
+"""Roofline tables from the dry-run artifacts (deliverable g).
+
+Reads runs/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and prints the per-(arch × shape) three-term table for the single-pod
+mesh, plus the multi-pod scaling check.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.analysis import roofline
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs", "dryrun")
+
+
+def run():
+    if not os.path.isdir(RUNS):
+        print("  (no dry-run artifacts — run `python -m repro.launch.dryrun`)")
+        return []
+    records = roofline.load_records(RUNS)
+    print("# Roofline — single-pod 16x16 (per-device terms, scan-corrected)")
+    print(roofline.table(records, mesh="16x16"))
+    print("\n# Multi-pod 2x16x16 (proves the pod axis shards)")
+    print(roofline.table(records, mesh="2x16x16"))
+    return [("roofline/cells", {"n": len(records)})]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,100 @@
+"""YCSB throughput benchmarks — paper Fig 4a/4b (ordered) and Fig 5
+(unordered), §7.3 (WOART-style global lock).
+
+Simulator-scale N (default 20K keys vs the paper's 64M on Optane): the
+numbers are RELATIVE throughputs; the paper's claims we validate are
+ordering relations (P-ART > FAST&FAIR on writes, P-CLHT ≥ CCEH reads,
+global-lock WOART ≪ P-ART) and the counter trends in counters.py.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem
+from repro.core.baselines import CCEH, FastFair, LevelHashing
+from repro.core.ycsb import WORKLOADS, generate, run_workload
+
+ORDERED = {
+    "FAST&FAIR": lambda p: FastFair(p, fixed=True),
+    "P-BwTree": PBwTree,
+    "P-Masstree": PMasstree,
+    "P-ART": PART,
+    "P-HOT": PHOT,
+}
+UNORDERED = {
+    "CCEH": lambda p: CCEH(p, depth=4, fixed=True),
+    "LevelHashing": lambda p: LevelHashing(p, n_top=256),
+    "P-CLHT": lambda p: PCLHT(p, n_buckets=512),
+}
+
+
+class GlobalLockART(PART):
+    """§7.3 WOART stand-in: write-optimal PM radix tree made concurrent
+    with a single global lock (the WOART authors' suggestion)."""
+
+    def insert(self, key, value):
+        self.pmem.lock(self.super, 7)
+        try:
+            return super().insert(key, value)
+        finally:
+            self.pmem.unlock(self.super, 7)
+
+    def lookup(self, key):
+        self.pmem.lock(self.super, 7)
+        try:
+            return super().lookup(key)
+        finally:
+            self.pmem.unlock(self.super, 7)
+
+
+def bench_index(name: str, factory: Callable, n_load: int, n_run: int,
+                workloads: List[str], *, scans: bool) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for wl_name in workloads:
+        if wl_name == "E" and not scans:
+            continue
+        wl = generate(wl_name, n_load, n_run, seed=7)
+        pmem = PMem()
+        idx = factory(pmem)
+        t0 = time.perf_counter()
+        run_workload(idx, wl, phase="load")
+        t_load = time.perf_counter() - t0
+        if wl_name == "LoadA":
+            out["LoadA"] = len(wl.load_ops) / t_load / 1e3
+            continue
+        t0 = time.perf_counter()
+        run_workload(idx, wl, phase="run")
+        t_run = time.perf_counter() - t0
+        out[wl_name] = len(wl.run_ops) / t_run / 1e3
+    return out
+
+
+def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True):
+    rows = []
+    wls = ["LoadA", "A", "B", "C", "E"]
+    print("# Fig 4a analogue — ordered indexes, Kops/s (randint keys)")
+    for name, factory in ORDERED.items():
+        r = bench_index(name, factory, n_load, n_run, wls, scans=True)
+        rows.append((f"ycsb_ordered/{name}", r))
+        print(f"  {name:12s} " + "  ".join(f"{w}={r.get(w, 0):8.1f}"
+                                           for w in wls))
+    print("# Fig 5 analogue — unordered indexes, Kops/s")
+    for name, factory in UNORDERED.items():
+        r = bench_index(name, factory, n_load, n_run, wls[:-1], scans=False)
+        rows.append((f"ycsb_unordered/{name}", r))
+        print(f"  {name:12s} " + "  ".join(f"{w}={r.get(w, 0):8.1f}"
+                                           for w in wls[:-1]))
+    if woart:
+        print("# §7.3 analogue — WOART-style global lock vs P-ART")
+        r = bench_index("WOART-lock", GlobalLockART, n_load // 2, n_run // 2,
+                        ["LoadA", "A", "C"], scans=False)
+        rows.append(("ycsb_woart/WOART-lock", r))
+        print(f"  {'WOART-lock':12s} " + "  ".join(
+            f"{w}={r.get(w, 0):8.1f}" for w in ("LoadA", "A", "C")))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

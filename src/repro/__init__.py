@@ -1,0 +1,2 @@
+"""RECIPE on TPU: crash-consistent indexes (SOSP'19) as the metadata
+substrate of a multi-pod JAX training/serving framework."""

@@ -1,0 +1,8 @@
+"""Assigned-architecture configs (--arch <id>)."""
+from .base import (ArchConfig, MambaCfg, MoECfg, RWKVCfg, EncDecCfg,
+                   VisionStubCfg, ShapeCfg, SHAPES, all_archs, get_arch,
+                   layer_kinds, register_arch, shape_applicable)
+
+__all__ = ["ArchConfig", "MambaCfg", "MoECfg", "RWKVCfg", "EncDecCfg",
+           "VisionStubCfg", "ShapeCfg", "SHAPES", "all_archs", "get_arch",
+           "layer_kinds", "register_arch", "shape_applicable"]

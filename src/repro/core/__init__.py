@@ -1,0 +1,25 @@
+"""RECIPE core: the paper's contribution — principled conversion of
+concurrent DRAM indexes to crash-consistent PM indexes — plus the
+persistence simulator and the targeted crash-testing methodology."""
+
+from .pmem import (CACHELINE_BYTES, WORD_BYTES, WORDS_PER_LINE, CrashPoint,
+                   DeadlockError, NULL, OpCounters, PMem, Region, measure_op)
+from .conditions import (CONVERSION_TABLE, Condition, ConversionSpec,
+                         RecipeIndex, crash_detect_fix, register)
+from .arena import Arena
+from .clht import PCLHT
+from .art import PART
+from .hot import PHOT
+from .bwtree import PBwTree
+from .masstree import PMasstree
+from .crash_testing import (CrashReport, PMSnapshot, audit_durability,
+                            run_crash_sweep)
+
+__all__ = [
+    "CACHELINE_BYTES", "WORD_BYTES", "WORDS_PER_LINE", "CrashPoint",
+    "DeadlockError", "NULL", "OpCounters", "PMem", "Region", "measure_op",
+    "CONVERSION_TABLE", "Condition", "ConversionSpec", "RecipeIndex",
+    "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
+    "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
+    "audit_durability", "run_crash_sweep",
+]

@@ -1,0 +1,302 @@
+"""P-CLHT — persistent Cache-Line Hash Table (RECIPE Condition #1).
+
+Faithful to the paper's §6.2 conversion of CLHT-LB:
+
+* each bucket is exactly one cache line: 3 key/value pairs + a chain
+  pointer (``[k0,k1,k2, v0,v1,v2, next, pad]`` = 8 words = 64 B);
+* readers are non-blocking and use the CLHT *atomic snapshot* (read
+  key, read value, re-read key);
+* writers lock the bucket, then commit via a single 8-byte atomic
+  store — value first (persisted), then key (the commit point);
+* deletes commit by atomically storing 0 to the key word;
+* re-hashing is copy-on-write into a fresh table followed by a single
+  atomic swap of the table pointer in the superblock.
+
+Conversion action (#1): cache-line flush + fence after each store, with
+the paper's optimization that stores preceding the final atomic commit
+store may be persisted with one flush of their region before the
+commit.  Common-case insert: 2 clwb + 2 fences (paper measures 1.5/2.5).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .conditions import Condition, ConversionSpec, RecipeIndex, register
+from .pmem import NULL, PMem, Region
+
+SLOTS = 3
+BUCKET_WORDS = 8
+HDR_WORDS = 8  # header line: [n_buckets, overflow_cursor, ...]
+MAX_CHAIN = 4  # chain length that triggers a resize
+
+SPEC = register(ConversionSpec(
+    name="P-CLHT", structure="hash table", reader="non-blocking",
+    writer="blocking", non_smo=Condition.ATOMIC_STORE,
+    smo=Condition.ATOMIC_STORE,
+    notes="CoW rehash + atomic table-pointer swap; 30 LOC in the paper",
+))
+
+
+_M64 = (1 << 64) - 1
+
+
+def _mix(key: int) -> int:
+    """splitmix64 finalizer — the multiplicative hash used everywhere."""
+    z = (int(key) + 0x9E3779B97F4A7C15) & _M64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return z ^ (z >> 31)
+
+
+class PCLHT(RecipeIndex):
+    ORDERED = False
+    spec = SPEC
+
+    def __init__(self, pmem: PMem, n_buckets: int = 64, grow: bool = True,
+                 name: str = "clht"):
+        super().__init__(pmem)
+        self.grow = grow
+        self.name = name
+        existing = pmem.find(f"{name}.super")
+        if existing is not None:
+            self.super = existing  # attach (restart): no reinit needed
+            return
+        self.super = pmem.alloc(f"{name}.super", 8)
+        table = self._new_table(n_buckets)
+        pmem.store(self.super, 0, table.rid)
+        pmem.persist_region(self.super)
+
+    # ------------------------------------------------------------------
+    # table layout helpers
+    # ------------------------------------------------------------------
+    def _new_table(self, n_buckets: int) -> Region:
+        # half the region again as overflow-bucket arena
+        n_overflow = max(8, n_buckets // 2)
+        words = HDR_WORDS + (n_buckets + n_overflow) * BUCKET_WORDS
+        t = self.pmem.alloc(f"{self.name}.table[{n_buckets}]", words)
+        self.pmem.store(t, 0, n_buckets)
+        self.pmem.store(t, 1, HDR_WORDS + n_buckets * BUCKET_WORDS)  # overflow cursor
+        self.pmem.persist_region(t)
+        return t
+
+    def _table(self) -> Region:
+        rid = self.pmem.load(self.super, 0)
+        return self.pmem.regions[rid]
+
+    def _bucket_off(self, t: Region, key: int) -> int:
+        n = self.pmem.load(t, 0)
+        return HDR_WORDS + (_mix(key) % n) * BUCKET_WORDS
+
+    def _alloc_overflow(self, t: Region) -> Optional[int]:
+        cur = self.pmem.load(t, 1)
+        if cur + BUCKET_WORDS > t.n_words:
+            return None
+        # The cursor bump is not itself a commit point: an allocated but
+        # never-linked bucket is unreachable garbage (RECIPE assumes GC).
+        self.pmem.store(t, 1, cur + BUCKET_WORDS)
+        self.pmem.persist(t, 1)
+        return cur
+
+    # ------------------------------------------------------------------
+    # reads — non-blocking, atomic snapshot
+    # ------------------------------------------------------------------
+    def lookup(self, key: int) -> Optional[int]:
+        assert key != NULL
+        t = self._table()
+        off = self._bucket_off(t, key)
+        while off != NULL:
+            for s in range(SLOTS):
+                k1 = self.pmem.load(t, off + s)
+                if k1 == key:
+                    v = self.pmem.load(t, off + SLOTS + s)
+                    k2 = self.pmem.load(t, off + s)  # atomic snapshot re-check
+                    if k2 == key:
+                        return v
+            off = self.pmem.load(t, off + 6)
+        return None
+
+    # ------------------------------------------------------------------
+    # writes — bucket-locked, single-atomic-store commit (Condition #1)
+    # ------------------------------------------------------------------
+    def insert(self, key: int, value: int) -> bool:
+        assert key != NULL
+        while True:
+            status = self._insert_once(key, value)
+            if status == "rehash":
+                self._rehash()
+                continue
+            if status == "rehash_done_true":
+                self._rehash()
+                return True
+            return status == "true"
+
+    def _insert_once(self, key: int, value: int) -> str:
+        # writers take the resize lock shared; rehash takes it exclusive
+        self.pmem.lock_shared(self.super, 0)
+        try:
+            t = self._table()
+            head = self._bucket_off(t, key)
+            self.pmem.lock(t, head)
+            try:
+                off, chain_len = head, 1
+                while True:
+                    for s in range(SLOTS):
+                        if self.pmem.load(t, off + s) == key:
+                            return "false"  # CLHT insert fails on existing key
+                    nxt = self.pmem.load(t, off + 6)
+                    if nxt == NULL:
+                        break
+                    off, chain_len = nxt, chain_len + 1
+                # find an empty slot in the chain
+                slot = self._find_empty(t, head)
+                if slot is not None:
+                    boff, s = slot
+                    # value first (persist), then the atomic key store
+                    self.pmem.store(t, boff + SLOTS + s, value)
+                    self.pmem.clwb(t, boff + SLOTS + s)
+                    self.pmem.fence()
+                    self.pmem.store(t, boff + s, key)
+                    self.pmem.clwb(t, boff + s)
+                    self.pmem.fence()
+                    if chain_len > MAX_CHAIN and self.grow:
+                        return "rehash_done_true"
+                    return "true"
+                # chain exhausted: link a fresh overflow bucket
+                new_off = self._alloc_overflow(t)
+                if new_off is None:
+                    return "rehash"
+                self.pmem.store(t, new_off + SLOTS + 0, value)
+                self.pmem.store(t, new_off + 0, key)
+                self.pmem.flush_range(t, new_off, new_off + BUCKET_WORDS)
+                self.pmem.fence()
+                # commit point: single atomic store of the chain pointer
+                self.pmem.store(t, off + 6, new_off)
+                self.pmem.clwb(t, off + 6)
+                self.pmem.fence()
+                if chain_len + 1 > MAX_CHAIN and self.grow:
+                    return "rehash_done_true"
+                return "true"
+            finally:
+                self.pmem.unlock(t, head)
+        finally:
+            self.pmem.unlock_shared(self.super, 0)
+
+    def _find_empty(self, t: Region, head: int) -> Optional[Tuple[int, int]]:
+        off = head
+        while off != NULL:
+            for s in range(SLOTS):
+                if self.pmem.load(t, off + s) == NULL:
+                    return off, s
+            off = self.pmem.load(t, off + 6)
+        return None
+
+    def delete(self, key: int) -> bool:
+        self.pmem.lock_shared(self.super, 0)
+        try:
+            t = self._table()
+            head = self._bucket_off(t, key)
+            self.pmem.lock(t, head)
+            try:
+                off = head
+                while off != NULL:
+                    for s in range(SLOTS):
+                        if self.pmem.load(t, off + s) == key:
+                            # commit: atomically store 0 to the key word
+                            self.pmem.store(t, off + s, NULL)
+                            self.pmem.clwb(t, off + s)
+                            self.pmem.fence()
+                            return True
+                    off = self.pmem.load(t, off + 6)
+                return False
+            finally:
+                self.pmem.unlock(t, head)
+        finally:
+            self.pmem.unlock_shared(self.super, 0)
+
+    # ------------------------------------------------------------------
+    # SMO: copy-on-write rehash, atomic table swap (Condition #1)
+    # ------------------------------------------------------------------
+    def _rehash(self, expect_rid: Optional[int] = None) -> None:
+        self.pmem.lock_excl(self.super, 0)
+        try:
+            old = self._table()
+            if expect_rid is not None and old.rid != expect_rid:
+                return  # another writer already resized
+            n_old = self.pmem.load(old, 0)
+            new = self._new_table(n_old * 2)
+            for key, value in self._items(old):
+                self._raw_insert(new, key, value)
+            # persist the entire new table *before* the commit point
+            self.pmem.persist_region(new)
+            # commit point: single atomic store of the table pointer
+            self.pmem.store(self.super, 0, new.rid)
+            self.pmem.clwb(self.super, 0)
+            self.pmem.fence()
+            self.pmem.free(old)  # unreachable; GC reclaims
+        finally:
+            self.pmem.unlock(self.super, 0)
+
+    def _raw_insert(self, t: Region, key: int, value: int) -> None:
+        """Insert into a private (not yet published) table: no fences."""
+        off = HDR_WORDS + (_mix(key) % self.pmem.load(t, 0)) * BUCKET_WORDS
+        while True:
+            for s in range(SLOTS):
+                if self.pmem.load(t, off + s) == NULL:
+                    self.pmem.store(t, off + SLOTS + s, value)
+                    self.pmem.store(t, off + s, key)
+                    return
+            nxt = self.pmem.load(t, off + 6)
+            if nxt == NULL:
+                new_off = self._alloc_overflow(t)
+                if new_off is None:  # overflow arena full: grow recursively
+                    raise MemoryError("overflow arena exhausted during rehash")
+                self.pmem.store(t, off + 6, new_off)
+                nxt = new_off
+            off = nxt
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def _items(self, t: Region) -> Iterator[Tuple[int, int]]:
+        n = self.pmem.load(t, 0)
+        for b in range(n):
+            off = HDR_WORDS + b * BUCKET_WORDS
+            while off != NULL:
+                for s in range(SLOTS):
+                    k = self.pmem.load(t, off + s)
+                    if k != NULL:
+                        yield k, self.pmem.load(t, off + SLOTS + s)
+                off = self.pmem.load(t, off + 6)
+
+    def keys(self) -> Iterator[int]:
+        for k, _ in self._items(self._table()):
+            yield k
+
+    def items(self) -> Iterator[Tuple[int, int]]:
+        return self._items(self._table())
+
+    def check_invariants(self) -> None:
+        seen = {}
+        for k, v in self._items(self._table()):
+            assert k not in seen, f"duplicate key {k} in table"
+            seen[k] = v
+
+    # ------------------------------------------------------------------
+    # data-plane export: dense arrays for the Pallas probe kernel
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """(keys, vals, next) bucket-major views + n_buckets, for batched
+        jit/Pallas lookups.  Layout matches kernels/clht_probe."""
+        t = self._table()
+        n = self.pmem.load(t, 0)
+        total = (t.n_words - HDR_WORDS) // BUCKET_WORDS
+        base = t.cache[HDR_WORDS:HDR_WORDS + total * BUCKET_WORDS].reshape(total, BUCKET_WORDS)
+        keys = base[:, 0:SLOTS].copy()
+        vals = base[:, SLOTS:2 * SLOTS].copy()
+        nxt = base[:, 6].copy()
+        # chain pointers are word offsets; convert to bucket indices (-1 = none)
+        nxt = np.where(nxt == NULL, -1, (nxt - HDR_WORDS) // BUCKET_WORDS)
+        return keys, vals, nxt, n

@@ -1,0 +1,126 @@
+"""The RECIPE conditions (§4) as first-class framework objects.
+
+Every converted index declares which condition its non-SMO and SMO
+paths satisfy (paper Table 2), and the conversion machinery enforces
+the corresponding *persist discipline* at runtime:
+
+* after any completed write operation, no dirtied cache line may remain
+  unpersisted (``PMem.assert_clean`` — the paper's PIN durability test);
+* Condition #2/#3 helper paths must persist the loads they depend on
+  before acting (flush-on-read in the help path);
+* Condition #3 indexes must route inconsistency fixes through a
+  try-lock crash-detection gate (§6 "Crash detection").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, Iterator, List, Optional, Tuple
+
+from .pmem import PMem, Region, CrashPoint
+
+
+class Condition(enum.Enum):
+    """Which RECIPE condition a write path satisfies."""
+
+    ATOMIC_STORE = 1  # updates visible via a single hardware-atomic store
+    WRITERS_FIX = 2  # non-blocking writers with a helping mechanism
+    WRITERS_DONT_FIX = 3  # blocking writers, detect but don't fix
+
+
+@dataclasses.dataclass(frozen=True)
+class ConversionSpec:
+    """Per-index record of the conversion (paper Tables 1 & 2)."""
+
+    name: str
+    structure: str
+    reader: str  # "non-blocking"
+    writer: str  # "blocking" | "non-blocking"
+    non_smo: Condition
+    smo: Condition
+    notes: str = ""
+
+
+class RecipeIndex:
+    """Base class for converted PM indexes.
+
+    Concrete indexes implement ``insert/lookup/delete`` (and
+    ``range_query`` for ordered indexes) directly against a ``PMem``.
+    ``recover()`` is deliberately trivial for RECIPE indexes — the whole
+    point of the paper is that reads/writes already contain the
+    recovery logic; recovery only reinitializes volatile lock state,
+    which ``PMem.crash`` already does.
+    """
+
+    spec: ConversionSpec
+    ORDERED = False
+
+    def __init__(self, pmem: PMem):
+        self.pmem = pmem
+
+    # -- the five-operation interface of §2.1 ---------------------------
+    def insert(self, key: int, value: int) -> bool:
+        raise NotImplementedError
+
+    def update(self, key: int, value: int) -> bool:
+        # Several of the paper's indexes (CLHT, FAST&FAIR, CCEH) do not
+        # support updates; default maps to insert semantics.
+        return self.insert(key, value)
+
+    def lookup(self, key: int) -> Optional[int]:
+        raise NotImplementedError
+
+    def delete(self, key: int) -> bool:
+        raise NotImplementedError
+
+    def range_query(self, key_lo: int, key_hi: int) -> List[Tuple[int, int]]:
+        raise NotImplementedError(f"{self.spec.name} is unordered")
+
+    # -- recovery --------------------------------------------------------
+    def recover(self) -> None:
+        """Post-crash hook.  RECIPE indexes need no log replay: reads
+        tolerate and writes fix inconsistencies.  (Hand-crafted baselines
+        override this with their real recovery algorithms.)"""
+
+    # -- introspection for tests/benchmarks -------------------------------
+    def keys(self) -> Iterator[int]:
+        raise NotImplementedError
+
+    def check_invariants(self) -> None:
+        """Structure-specific integrity check used by property tests."""
+
+    # -- volatile (non-PM) python-side state, for snapshot/restore --------
+    def volatile_state(self) -> dict:
+        return {}
+
+    def set_volatile_state(self, state: dict) -> None:
+        pass
+
+
+def crash_detect_fix(pmem: PMem, lock_region: Region, lock_slot: int,
+                     fix: Callable[[], None]) -> bool:
+    """The §6 "Crash detection" gate for Condition #3 indexes.
+
+    On observing an inconsistency during traversal, try the node lock:
+    if it cannot be acquired the inconsistency is (possibly) transient —
+    another writer owns it; if it *can* be acquired there is no
+    concurrent writer, so the inconsistency is permanent (a crash
+    artifact) and ``fix`` — built from the write path — repairs it.
+    Returns True if the fix ran.
+    """
+    if not pmem.try_lock(lock_region, lock_slot):
+        return False
+    try:
+        fix()
+        return True
+    finally:
+        pmem.unlock(lock_region, lock_slot)
+
+
+CONVERSION_TABLE: Dict[str, ConversionSpec] = {}
+
+
+def register(spec: ConversionSpec) -> ConversionSpec:
+    CONVERSION_TABLE[spec.name] = spec
+    return spec

@@ -1,0 +1,270 @@
+"""Targeted crash-recovery testing for PM indexes (paper §5).
+
+The paper's key observation: insert and SMO operations in non-blocking
+indexes are composed of a *small number of ordered atomic stores*
+(fewer than five in every index they tested), so it suffices to
+simulate a crash after **each atomic store** of each operation rather
+than sampling crash points randomly/exhaustively (Yat, pmreorder).
+
+For every operation ``i`` in a workload and every store count ``k``
+within that operation we:
+
+1. restore the PM image to just before op ``i`` (snapshot/restore);
+2. arm the simulator to crash at op ``i``'s ``k``-th store and run the
+   op ("returning from the operation without any clean-up activities");
+3. fail over: drop the volatile cache (``powerfail``) or keep memory
+   (``interrupt``), reinitialize locks, call ``index.recover()``;
+4. run a post-crash phase of reads and writes (optionally from several
+   threads, as in §7.5) and verify:
+   * every previously-acknowledged key reads back with its value,
+   * the crashed op's key is either fully present or fully absent,
+   * new writes succeed and are readable,
+   * structure invariants hold.
+
+Durability is audited separately (the paper's PIN tracing): after every
+*completed* operation, no dirtied cache line may remain unpersisted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .pmem import CrashPoint, PMem, Region
+
+Op = Tuple[str, int, int]  # (kind, key, value) — kind in {insert, delete, lookup}
+
+
+# ----------------------------------------------------------------------
+# snapshot / restore (regions keep object identity so indexes may cache
+# only the regions they created in __init__)
+# ----------------------------------------------------------------------
+class PMSnapshot:
+    def __init__(self, pmem: PMem, index: object = None):
+        self.regions = {
+            rid: (r, r.cache.copy(), r.pm.copy(), set(r.dirty), set(r.pending))
+            for rid, r in pmem.regions.items()
+        }
+        self.next_rid = pmem._next_rid
+        self.alloc_log = list(pmem.alloc_log)
+        self.index = index
+        self.vol = index.volatile_state() if hasattr(index, "volatile_state") else None
+
+    def restore(self, pmem: PMem) -> None:
+        pmem.regions = {}
+        for rid, (r, cache, pm, dirty, pending) in self.regions.items():
+            r.cache[:] = cache
+            r.pm[:] = pm
+            r.dirty = set(dirty)
+            r.pending = set(pending)
+            pmem.regions[rid] = r
+        pmem._next_rid = self.next_rid
+        pmem.alloc_log = list(self.alloc_log)
+        with pmem._lock_mutex:
+            pmem.locks.clear()
+            pmem._shared.clear()
+        pmem.disarm_crash()
+        if self.vol is not None:
+            self.index.set_volatile_state(self.vol)
+
+
+@dataclasses.dataclass
+class CrashReport:
+    index_name: str
+    n_crash_states: int = 0
+    n_ops_tested: int = 0
+    consistency_failures: List[str] = dataclasses.field(default_factory=list)
+    durability_failures: List[str] = dataclasses.field(default_factory=list)
+    stall_failures: List[str] = dataclasses.field(default_factory=list)
+    max_stores_per_op: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not (self.consistency_failures or self.durability_failures
+                    or self.stall_failures)
+
+    def summary(self) -> str:
+        status = "PASS" if self.ok else "FAIL"
+        return (f"{self.index_name}: {status} — {self.n_crash_states} crash states "
+                f"over {self.n_ops_tested} ops (max {self.max_stores_per_op} "
+                f"stores/op); {len(self.consistency_failures)} consistency, "
+                f"{len(self.durability_failures)} durability, "
+                f"{len(self.stall_failures)} stall failures")
+
+
+def _apply(index, op: Op) -> None:
+    kind, key, value = op
+    if kind == "insert":
+        index.insert(key, value)
+    elif kind == "delete":
+        index.delete(key)
+    else:
+        index.lookup(key)
+
+
+def _verify(index, expect: Dict[int, int], crashed: Optional[Op],
+            report: CrashReport, tag: str) -> None:
+    kind = crashed[0] if crashed else None
+    ckey = crashed[1] if crashed else None
+    for key, value in expect.items():
+        if key == ckey:
+            continue
+        got = index.lookup(key)
+        if got != value:
+            report.consistency_failures.append(
+                f"{tag}: key {key} expected {value} got {got}")
+            return  # one failure per state is enough signal
+    if crashed is not None:
+        got = index.lookup(ckey)
+        if kind == "insert":
+            prior = expect.get(ckey)
+            if got is not None and got != crashed[2] and got != prior:
+                report.consistency_failures.append(
+                    f"{tag}: crashed insert of {ckey} reads {got!r} "
+                    f"(neither absent, old, nor new)")
+        elif kind == "delete":
+            prior = expect.get(ckey)
+            if got is not None and got != prior:
+                report.consistency_failures.append(
+                    f"{tag}: crashed delete of {ckey} reads {got!r}")
+    try:
+        index.check_invariants()
+    except AssertionError as e:  # pragma: no cover - failure path
+        report.consistency_failures.append(f"{tag}: invariant: {e}")
+
+
+def run_crash_sweep(
+    factory: Callable[[PMem], object],
+    workload: Sequence[Op],
+    *,
+    crash_ops: Optional[Sequence[int]] = None,
+    mode: str = "powerfail",
+    evict_probability: float = 0.0,
+    post_writes: int = 16,
+    post_threads: int = 1,
+    max_states: Optional[int] = None,
+    seed: int = 0,
+) -> CrashReport:
+    """Enumerate targeted crash states over ``workload`` and verify recovery."""
+    pmem = PMem(seed=seed)
+    index = factory(pmem)
+    report = CrashReport(index_name=type(index).__name__)
+    rng = np.random.default_rng(seed)
+
+    if crash_ops is None:
+        crash_ops = range(len(workload))
+
+    expect: Dict[int, int] = {}
+    op_idx_set = set(crash_ops)
+    for i, op in enumerate(workload):
+        if i in op_idx_set:
+            snap = PMSnapshot(pmem, index)
+            expect_before = dict(expect)
+            # dry-run to count this op's atomic stores
+            n_stores = pmem.counters.stores
+            try:
+                _apply(index, op)
+            except Exception as e:  # pragma: no cover
+                report.stall_failures.append(f"op{i} {op}: dry-run raised {e!r}")
+                snap.restore(pmem)
+                continue
+            n_stores = pmem.counters.stores - n_stores
+            report.max_stores_per_op = max(report.max_stores_per_op, n_stores)
+            snap.restore(pmem)
+            report.n_ops_tested += 1
+            # crash after each atomic store (the §5 targeted strategy)
+            for k in range(n_stores):
+                if max_states is not None and report.n_crash_states >= max_states:
+                    break
+                report.n_crash_states += 1
+                tag = f"op{i}{op[:2]}@store{k}"
+                pmem.arm_crash(after_stores=k)
+                try:
+                    _apply(index, op)
+                    pmem.disarm_crash()
+                    crashed: Optional[Op] = None  # op completed before k stores
+                except CrashPoint:
+                    crashed = op
+                except Exception as e:  # pragma: no cover
+                    report.stall_failures.append(f"{tag}: raised {e!r}")
+                    snap.restore(pmem)
+                    continue
+                pmem.crash(mode=mode, evict_probability=evict_probability)
+                try:
+                    index.recover()
+                except Exception as e:
+                    report.stall_failures.append(f"{tag}: recover raised {e!r}")
+                    snap.restore(pmem)
+                    continue
+                try:
+                    _post_crash_phase(index, expect_before, crashed, report, tag,
+                                      post_writes, post_threads, rng)
+                except Exception as e:
+                    report.stall_failures.append(f"{tag}: post-crash phase {e!r}")
+                snap.restore(pmem)
+        # run the op for real and advance the expected model
+        _apply(index, op)
+        kind, key, value = op
+        if kind == "insert":
+            expect.setdefault(key, value)  # CLHT-style: insert won't overwrite
+        elif kind == "delete":
+            expect.pop(key, None)
+    return report
+
+
+def _post_crash_phase(index, expect: Dict[int, int], crashed: Optional[Op],
+                      report: CrashReport, tag: str, post_writes: int,
+                      post_threads: int, rng: np.random.Generator) -> None:
+    """§7.5: after the crash, read+write from several threads, then read
+    back every successfully inserted key."""
+    _verify(index, expect, crashed, report, tag)
+    new_keys = [int(k) for k in
+                rng.integers(1 << 40, 1 << 41, size=post_writes)]
+    acked: Dict[int, int] = {}
+    ack_mutex = threading.Lock()
+
+    def writer(tid: int) -> None:
+        for j, key in enumerate(new_keys):
+            if j % max(post_threads, 1) != tid:
+                continue
+            value = key ^ 0xABCD
+            if index.insert(key, value):
+                with ack_mutex:
+                    acked[key] = value
+            index.lookup(key)
+
+    if post_threads <= 1:
+        writer(0)
+    else:
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(post_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for key, value in acked.items():
+        got = index.lookup(key)
+        if got != value:
+            report.consistency_failures.append(
+                f"{tag}: post-crash write {key} lost (got {got!r})")
+            return
+    _verify(index, expect, crashed, report, tag + "+post")
+
+
+def audit_durability(factory: Callable[[PMem], object],
+                     workload: Sequence[Op], seed: int = 0) -> List[str]:
+    """The PIN-based durability test (§5): after every completed op, all
+    dirtied cache lines must have been flushed+fenced."""
+    pmem = PMem(seed=seed)
+    index = factory(pmem)
+    pmem.fence()  # settle construction
+    failures: List[str] = []
+    for i, op in enumerate(workload):
+        _apply(index, op)
+        leftover = pmem.unpersisted_lines()
+        if leftover:
+            failures.append(f"op{i} {op}: unpersisted lines {leftover[:4]}")
+    return failures

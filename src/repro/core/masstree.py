@@ -1,0 +1,501 @@
+"""P-Masstree — persistent Masstree-style B-link tree (RECIPE §6.5).
+
+Masstree's leaves commit every insert/delete with one atomic store of
+an 8-byte **permutation word** (4-bit count + fifteen 4-bit slot
+indices in sorted order) — Condition #1.  Its internal nodes, however,
+shift keys non-atomically and readers *retry* on version mismatch, so
+vanilla Masstree does not fit any RECIPE condition.  The paper's fix —
+which we implement — restructures internal nodes to work like the
+leaves (permutation-committed, B-link sibling pointers + high keys) so
+the whole tree supports the 2-step atomic split and readers never
+retry.  (The trie-of-B+-trees layering for >8-byte keys is out of
+scope here; one layer over 8-byte keys exercises every conversion
+mechanism.)
+
+Split protocol (each step leaves a consistent, tolerable state):
+  s0. build the sibling copy-on-write (upper half, old high key, old
+      sibling link) and persist it — unreachable garbage until linked;
+  s1. atomic store: left.next_sibling = sibling;
+  s2. atomic store: left.high_key = separator   (readers for keys ≥ sep
+      now take the B-link move; duplicates in left are masked);
+  s3. atomic store: left.permutation drops the moved entries;
+  s4. insert (sep, sibling) into the parent — itself a Condition-#1
+      permutation commit (recursing up; root split swaps the superblock
+      root pointer).
+
+Crash between any steps: readers reach every key via B-link moves.
+Writers detect the leftover (a sibling overlapping the parent's view)
+with the §6 try-lock gate and **replay the split algorithm** — the
+helper the paper adds to make Masstree Condition #2; the same replay
+undoes a half-done merge, which is why merges need no extra machinery
+(we absorb deletes by tombstone + rebuild, as the paper suggests).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Tuple
+
+from .arena import Arena
+from .conditions import Condition, ConversionSpec, RecipeIndex, register
+from .pmem import NULL, PMem
+
+FANOUT = 15
+T_LEAF, T_INNER = 1, 2
+
+# node: [type, permutation, next_sibling, high_key, leftmost_child,
+#        pad*3][keys[15]][vals_or_children[15]][pad*2] = 40 words
+NODE_WORDS = 40
+K0 = 8
+V0 = 8 + FANOUT
+
+INF = (1 << 63) - 1
+
+SPEC = register(ConversionSpec(
+    name="P-Masstree", structure="B+ tree & trie", reader="non-blocking",
+    writer="blocking", non_smo=Condition.ATOMIC_STORE,
+    smo=Condition.WRITERS_DONT_FIX,
+    notes="internal nodes restructured to B-link + permutation commit; "
+          "split-replay helper added (200 LOC in paper)",
+))
+
+
+# ----------------------------------------------------------------------
+# the 8-byte permutation word: count (4 bits) + 15 slot indices (4 bits)
+# ----------------------------------------------------------------------
+def perm_count(perm: int) -> int:
+    return perm & 0xF
+
+
+def perm_slot(perm: int, i: int) -> int:
+    """Slot index holding the i-th smallest key."""
+    return (perm >> (4 * (i + 1))) & 0xF
+
+
+def perm_pack(slots: List[int]) -> int:
+    word = len(slots) & 0xF
+    for i, s in enumerate(slots):
+        word |= (s & 0xF) << (4 * (i + 1))
+    return word
+
+
+def perm_slots(perm: int) -> List[int]:
+    return [perm_slot(perm, i) for i in range(perm_count(perm))]
+
+
+class PMasstree(RecipeIndex):
+    ORDERED = True
+    spec = SPEC
+
+    def __init__(self, pmem: PMem):
+        super().__init__(pmem)
+        self.arena = Arena(pmem, "mass")
+        self.super = pmem.alloc("mass.super", 8)  # word 0: root ptr
+        root = self._new_node(T_LEAF, high_key=INF)
+        self.arena.flush_range(root, NODE_WORDS)
+        self.arena.fence()
+        pmem.store(self.super, 0, root)
+        pmem.persist_region(self.super)
+
+    def volatile_state(self) -> dict:
+        return {"cursor": self.arena._cursor,
+                "segments": list(self.arena.segments)}
+
+    def set_volatile_state(self, state: dict) -> None:
+        self.arena._cursor = state["cursor"]
+        self.arena.segments = list(state["segments"])
+
+    # ------------------------------------------------------------------
+    # node helpers
+    # ------------------------------------------------------------------
+    def _new_node(self, ntype: int, *, high_key: int) -> int:
+        a = self.arena
+        p = a.alloc(NODE_WORDS)
+        a.store(p, ntype)
+        a.store(p + 1, perm_pack([]))
+        a.store(p + 2, NULL)
+        a.store(p + 3, high_key)
+        a.store(p + 4, NULL)
+        return p
+
+    def _entries(self, node: int) -> List[Tuple[int, int]]:
+        """(key, val) in sorted order, via one atomic permutation read."""
+        a = self.arena
+        perm = a.load(node + 1)
+        out = []
+        for s in perm_slots(perm):
+            out.append((a.load(node + K0 + s), a.load(node + V0 + s)))
+        return out
+
+    def _free_slot(self, node: int) -> Optional[int]:
+        used = set(perm_slots(self.arena.load(node + 1)))
+        for s in range(FANOUT):
+            if s not in used:
+                return s
+        return None
+
+    # ------------------------------------------------------------------
+    # traversal — non-blocking, B-link moves, no retries
+    # ------------------------------------------------------------------
+    def _descend(self, key: int) -> List[int]:
+        """Root-to-leaf path (after any B-link right moves per level)."""
+        a = self.arena
+        path: List[int] = []
+        node = self.pmem.load(self.super, 0)
+        while True:
+            # B-link: move right while the key is beyond our high key
+            while key >= a.load(node + 3) and a.load(node + 2) != NULL:
+                node = a.load(node + 2)
+            path.append(node)
+            if a.load(node) == T_LEAF:
+                return path
+            child = a.load(node + 4)  # leftmost
+            for k, c in self._entries(node):
+                if key >= k:
+                    child = c
+                else:
+                    break
+            node = child
+
+    def lookup(self, key: int) -> Optional[int]:
+        a = self.arena
+        leaf = self._descend(key)[-1]
+        while True:
+            for k, v in self._entries(leaf):
+                if k == key:
+                    return None if v == NULL else v
+            # the key may have moved right via a concurrent/crashed split
+            if key >= a.load(leaf + 3) and a.load(leaf + 2) != NULL:
+                leaf = a.load(leaf + 2)
+                continue
+            return None
+
+    # ------------------------------------------------------------------
+    # writes — blocking, permutation-word commits (Condition #1)
+    # ------------------------------------------------------------------
+    def insert(self, key: int, value: int) -> bool:
+        assert key != NULL
+        a = self.arena
+        while True:
+            path = self._descend(key)
+            leaf = path[-1]
+            a.lock(leaf)
+            try:
+                # re-validate under the lock; may need another right-move
+                if key >= a.load(leaf + 3) and a.load(leaf + 2) != NULL:
+                    continue
+                self._detect_and_fix_split(path, leaf)
+                entries = self._entries(leaf)
+                for k, v in entries:
+                    if k == key:
+                        if v != NULL:
+                            return False  # exists (no updates via insert)
+                        # tombstone revival: atomic value store
+                        s = self._slot_of(leaf, key)
+                        a.store(leaf + V0 + s, value)
+                        a.persist(leaf + V0 + s)
+                        return True
+                if len(entries) >= FANOUT:
+                    self._split(path, leaf)
+                    continue  # retry — the key range may have moved
+                slot = self._free_slot(leaf)
+                # write the pair into the free slot, persist, then commit
+                # with ONE atomic permutation store
+                a.store(leaf + K0 + slot, key)
+                a.store(leaf + V0 + slot, value)
+                a.clwb(leaf + K0 + slot)
+                a.clwb(leaf + V0 + slot)
+                a.fence()
+                perm = a.load(leaf + 1)
+                slots = perm_slots(perm)
+                pos = 0
+                while pos < len(slots) and a.load(leaf + K0 + slots[pos]) < key:
+                    pos += 1
+                slots.insert(pos, slot)
+                a.store(leaf + 1, perm_pack(slots))
+                a.persist(leaf + 1)
+                return True
+            finally:
+                a.unlock(leaf)
+
+    def _slot_of(self, node: int, key: int) -> int:
+        a = self.arena
+        for s in perm_slots(a.load(node + 1)):
+            if a.load(node + K0 + s) == key:
+                return s
+        raise KeyError(key)
+
+    def delete(self, key: int) -> bool:
+        """Atomic permutation store dropping the entry (§6.5)."""
+        a = self.arena
+        while True:
+            path = self._descend(key)
+            leaf = path[-1]
+            a.lock(leaf)
+            try:
+                if key >= a.load(leaf + 3) and a.load(leaf + 2) != NULL:
+                    continue
+                perm = a.load(leaf + 1)
+                slots = perm_slots(perm)
+                for i, s in enumerate(slots):
+                    if a.load(leaf + K0 + s) == key:
+                        if a.load(leaf + V0 + s) == NULL:
+                            return False
+                        slots.pop(i)
+                        a.store(leaf + 1, perm_pack(slots))
+                        a.persist(leaf + 1)
+                        return True
+                return False
+            finally:
+                a.unlock(leaf)
+
+    # ------------------------------------------------------------------
+    # the SMO: 2-step atomic split + parent insert
+    # ------------------------------------------------------------------
+    def _split(self, path: List[int], node: int,
+               held: frozenset = frozenset()) -> None:
+        """Caller holds node's lock (and every lock in ``held``)."""
+        a = self.arena
+        entries = self._entries(node)
+        mid = len(entries) // 2
+        sep = entries[mid][0]
+        ntype = a.load(node)
+        # s0: CoW sibling with the upper half (unreachable until s1)
+        sib = self._new_node(ntype, high_key=a.load(node + 3))
+        a.store(sib + 2, a.load(node + 2))
+        upper = entries[mid:] if ntype == T_LEAF else entries[mid + 1:]
+        if ntype == T_INNER:
+            a.store(sib + 4, entries[mid][1])  # leftmost child of sibling
+        slots = []
+        for i, (k, v) in enumerate(upper):
+            a.store(sib + K0 + i, k)
+            a.store(sib + V0 + i, v)
+            slots.append(i)
+        a.store(sib + 1, perm_pack(slots))
+        a.flush_range(sib, NODE_WORDS)
+        a.fence()
+        # s1 (atomic): link the sibling
+        a.store(node + 2, sib)
+        a.persist(node + 2)
+        # s2 (atomic): truncate our key range — readers for >= sep move right
+        a.store(node + 3, sep)
+        a.persist(node + 3)
+        # s3 (atomic): drop the moved entries from our permutation
+        keep = mid if ntype == T_LEAF else mid
+        old_slots = perm_slots(a.load(node + 1))
+        a.store(node + 1, perm_pack(old_slots[:keep]))
+        a.persist(node + 1)
+        # s4: insert (sep -> sib) into the parent
+        self._insert_parent(path, node, sep, sib, held | {node})
+
+    def _place_entry(self, parent: int, sep: int, sib: int) -> None:
+        """Insert (sep -> sib) into a node whose lock the caller holds
+        and which has room (permutation-word commit, Condition #1)."""
+        a = self.arena
+        slot = self._free_slot(parent)
+        a.store(parent + K0 + slot, sep)
+        a.store(parent + V0 + slot, sib)
+        a.clwb(parent + K0 + slot)
+        a.clwb(parent + V0 + slot)
+        a.fence()
+        slots = perm_slots(a.load(parent + 1))
+        pos = 0
+        while pos < len(slots) and a.load(parent + K0 + slots[pos]) < sep:
+            pos += 1
+        slots.insert(pos, slot)
+        a.store(parent + 1, perm_pack(slots))
+        a.persist(parent + 1)
+
+    def _insert_parent(self, path: List[int], node: int, sep: int,
+                       sib: int, held: frozenset = frozenset()) -> None:
+        """Place (sep -> sib) in node's parent.  ``held`` carries every
+        node whose lock this call chain already owns, so deep splits
+        never re-lock their own ancestors (self-deadlock)."""
+        a = self.arena
+        try:
+            i = path.index(node)
+        except ValueError:
+            i = len(path) - 1
+        held = held | {node}
+        if i == 0:
+            # root split: new root, committed by one superblock store
+            new_root = self._new_node(T_INNER, high_key=INF)
+            a.store(new_root + 4, node)
+            a.store(new_root + K0 + 0, sep)
+            a.store(new_root + V0 + 0, sib)
+            a.store(new_root + 1, perm_pack([0]))
+            a.flush_range(new_root, NODE_WORDS)
+            a.fence()
+            if self.pmem.load(self.super, 0) == node:
+                self.pmem.store(self.super, 0, new_root)
+                self.pmem.persist(self.super, 0)
+            else:
+                self._insert_inner_somewhere(sep, sib, held)
+            return
+        parent = path[i - 1]
+        we_locked = parent not in held
+        if we_locked:
+            a.lock(parent)
+        held = held | {parent}
+        try:
+            while True:
+                # the parent itself may have split since `path` was built
+                moved = False
+                while sep >= a.load(parent + 3) and a.load(parent + 2) != NULL:
+                    nxt = a.load(parent + 2)
+                    if we_locked:
+                        a.unlock(parent)
+                    parent = nxt
+                    we_locked = parent not in held
+                    if we_locked:
+                        a.lock(parent)
+                    held = held | {parent}
+                    moved = True
+                entries = self._entries(parent)
+                if any(v == sib for _, v in entries)                         or a.load(parent + 4) == sib:
+                    return  # split already completed (helper beat us)
+                if len(entries) < FANOUT:
+                    self._place_entry(parent, sep, sib)
+                    return
+                # split the (locked) parent, then loop: (sep, sib) may now
+                # belong in the parent's new sibling
+                self._split(path[:i], parent, held)
+        finally:
+            if we_locked:
+                a.unlock(parent)
+
+    def _insert_inner_somewhere(self, sep: int, sib: int,
+                                held: frozenset = frozenset()) -> None:
+        """Fallback when the root moved under us: re-descend to the inner
+        level that should reference ``sib`` and place the entry."""
+        a = self.arena
+        path = self._descend(sep)
+        if len(path) < 2:
+            return
+        target = path[-2]
+        we_locked = target not in held
+        if we_locked:
+            a.lock(target)
+        try:
+            entries = self._entries(target)
+            if any(v == sib for _, v in entries) or a.load(target + 4) == sib:
+                return
+            if len(entries) < FANOUT:
+                self._place_entry(target, sep, sib)
+            else:
+                self._split(path[:-1], target, held | {target})
+                self._insert_parent(path[:-1], target, sep, sib,
+                                    held | {target})
+        finally:
+            if we_locked:
+                a.unlock(target)
+
+    # ------------------------------------------------------------------
+    # crash detection + split replay (the added #3→#2 helper, §6.5)
+    # ------------------------------------------------------------------
+    def _detect_and_fix_split(self, path: List[int], leaf: int) -> None:
+        """Caller holds ``leaf``'s lock (so any inconsistency is permanent
+        — the §6 try-lock gate is satisfied by construction).  Detect a
+        crashed split: a linked sibling the parent doesn't know about, or
+        a half-truncated left node; replay the split algorithm to finish."""
+        a = self.arena
+        sib = a.load(leaf + 2)
+        if sib == NULL:
+            return
+        high = a.load(leaf + 3)
+        sib_entries = self._entries(sib)
+        if not sib_entries:
+            return
+        # crash between s1 and s2 (leaf only): high key not yet truncated —
+        # the separator is recoverable as the sibling's smallest key
+        sep_guess = sib_entries[0][0]
+        if high > sep_guess and a.load(leaf) == T_LEAF:
+            # persist the loads the fix depends on (Condition #2 action)
+            a.clwb(leaf + 1)
+            a.clwb(leaf + 2)
+            a.fence()
+            a.store(leaf + 3, sep_guess)  # replay s2
+            a.persist(leaf + 3)
+            high = sep_guess
+        # crash between s2 and s3 (leaf or inner): permutation still lists
+        # moved entries — drop everything >= our (truncated) high key
+        slots = perm_slots(a.load(leaf + 1))
+        keep = [s for s in slots if a.load(leaf + K0 + s) < high]
+        if len(keep) != len(slots):
+            a.store(leaf + 1, perm_pack(keep))  # replay s3
+            a.persist(leaf + 1)
+        # crash before s4: parent lacks the sibling — replay parent insert
+        if len(path) >= 2:
+            parent = path[-2]
+            if not any(v == sib for _, v in self._entries(parent)) \
+                    and a.load(parent + 4) != sib:
+                self._insert_parent(path, leaf, a.load(leaf + 3), sib)
+
+    # ------------------------------------------------------------------
+    # iteration
+    # ------------------------------------------------------------------
+    def _leftmost_leaf(self) -> int:
+        a = self.arena
+        node = self.pmem.load(self.super, 0)
+        while a.load(node) != T_LEAF:
+            node = a.load(node + 4)
+        return node
+
+    def items(self) -> Iterator[Tuple[int, int]]:
+        """Scan with reader tolerance: a crash between split steps can
+        leave entries duplicated between a node and its new sibling; the
+        scan returns a single record per key (paper §4.1 — reads may see
+        duplicates and return one), via a monotone key filter."""
+        a = self.arena
+        node = self._leftmost_leaf()
+        last = -1
+        while node != NULL:
+            high = a.load(node + 3)
+            for k, v in self._entries(node):
+                if v != NULL and k < high and k > last:
+                    yield k, v
+                    last = k
+            node = a.load(node + 2)
+
+    def keys(self) -> Iterator[int]:
+        for k, _ in self.items():
+            yield k
+
+    def range_query(self, key_lo: int, key_hi: int) -> List[Tuple[int, int]]:
+        a = self.arena
+        out = []
+        last = -1
+        node = self._descend(key_lo)[-1]
+        while node != NULL:
+            high = a.load(node + 3)
+            for k, v in self._entries(node):
+                if v != NULL and key_lo <= k <= key_hi and k < high and k > last:
+                    out.append((k, v))
+                    last = k
+            if high > key_hi:
+                break
+            node = a.load(node + 2)
+        return out
+
+    def check_invariants(self) -> None:
+        ks = list(self.keys())
+        assert ks == sorted(ks), "B-link leaf chain out of order"
+        assert len(ks) == len(set(ks)), "duplicate keys"
+
+    def _walk(self) -> Iterator[Tuple[int, int]]:
+        a = self.arena
+        stack = [self.pmem.load(self.super, 0)]
+        seen = set()
+        while stack:
+            node = stack.pop()
+            if node == NULL or node in seen:
+                continue
+            seen.add(node)
+            yield node, NODE_WORDS
+            stack.append(a.load(node + 2))
+            if a.load(node) == T_INNER:
+                stack.append(a.load(node + 4))
+                for _, c in self._entries(node):
+                    stack.append(c)
+
+    def gc(self) -> int:
+        return self.arena.gc(self._walk)

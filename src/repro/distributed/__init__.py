@@ -1,0 +1,3 @@
+from . import compression, sharding
+
+__all__ = ["compression", "sharding"]

@@ -1,0 +1,88 @@
+"""Gradient compression for the cross-pod data-parallel reduction.
+
+At 2+ pods the gradient all-reduce crosses the (slower) inter-pod
+links; int8 block-quantization with error feedback cuts those bytes 4×
+vs fp32 (2× vs bf16) while error feedback keeps SGD-style convergence
+(the quantization residual is carried into the next step instead of
+being dropped — Seide et al. 1-bit SGD lineage).
+
+Usage inside a step (the cross-pod axis is manual, the rest stays
+under GSPMD):
+
+    def reduce_grads_across_pods(grads, err):
+        q, scale, err = ef_quantize(grads, err)
+        q = jax.lax.psum(q, axis_name="pod")
+        return dequantize(q, scale / n_pods), err
+
+    step = shard_map(step_fn, mesh, in_specs=..., out_specs=...,
+                     auto=frozenset({"data", "model"}))
+
+The quantizer is pure jnp, tested for round-trip error bounds and for
+the error-feedback invariant (residual + dequant == original).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # quantization block (per-block scales bound the error)
+
+
+def _pad_to_block(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x → (int8 blocks, per-block fp32 scales)."""
+    blocks, _ = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def ef_quantize(x: jnp.ndarray, err: jnp.ndarray):
+    """Error-feedback quantize: returns (q, scale, new_err) with the
+    invariant dequant(q, scale) + new_err == x + err (up to fp32)."""
+    target = x.astype(jnp.float32) + err
+    q, scale = quantize(target)
+    recon = dequantize(q, scale, x.shape, jnp.float32)
+    new_err = target - recon
+    return q, scale, new_err
+
+
+def init_error(tree: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def compress_tree(grads: Any, err: Any):
+    """Tree-wise EF quantization; returns (q_tree, scale_tree, err_tree)."""
+    out = jax.tree.map(ef_quantize, grads, err)
+    q = jax.tree.map(lambda t: t[0], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    e = jax.tree.map(lambda t: t[2], out,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, e
+
+
+def decompress_tree(q: Any, s: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda qi, si, li: dequantize(qi, si, li.shape, li.dtype),
+        q, s, like)

@@ -1,0 +1,210 @@
+"""Sharding rules: parameter-path → PartitionSpec over the production
+mesh axes ("pod", "data", "model").
+
+Parallelism map (DESIGN.md §6):
+* DP  — batch over ("pod", "data");
+* TP  — attention heads / FFN columns / vocab over "model" (Megatron);
+* EP  — MoE expert dimension over "model" (experts live where their
+  FFN shards live; dispatch/combine einsums become all-to-alls);
+* SP  — long-context decode shards KV/state sequence over "data";
+* ZeRO-3 — optimizer moments additionally sharded over the data axes
+  along the first dimension that divides evenly.
+
+Any rule that does not divide the actual shape falls back to
+replication for that dim (recorded, so the dry-run can report it).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name → spec for the UNSTACKED parameter
+_RULES: Dict[str, Tuple] = {
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "projector": (None, "model"),
+    # attention
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # dense mlp
+    "w_up": (None, "model"), "w_gate": (None, "model"),
+    "w_down": ("model", None),
+    # moe (expert-parallel: E over "model")
+    "moe.w_up": ("model", None, None), "moe.w_gate": ("model", None, None),
+    "moe.w_down": ("model", None, None),
+    "router": (None, None),
+    # mamba
+    "w_in": (None, "model"), "w_conv": (None, "model"),
+    "w_bc": ("model", None), "w_dt": ("model", None),
+    "A_log": ("model",), "D": ("model",), "dt_bias": ("model",),
+    "w_out": ("model", None),
+    # rwkv
+    "w_r": (None, "model"), "w_k": (None, "model"), "w_v": (None, "model"),
+    "w_decay": (None, "model"), "w_o": ("model", None),
+    "decay_bias": ("model",), "bonus_u": ("model", None),
+    "cm_k": (None, "model"), "cm_v": ("model", None), "cm_r": (None, "model"),
+    "mu": (None, None), "cm_mu": (None, None),
+    # norms
+    "w": (None,), "b": (None,),
+}
+
+SCANNED_GROUPS = ("blocks", "encoder")  # leaves carry a leading layer dim
+
+
+def _path_names(path) -> List[str]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+    return names
+
+
+def rule_for(path_names: List[str]) -> Tuple:
+    leaf = path_names[-1]
+    if len(path_names) >= 2 and path_names[-2] == "moe" \
+            and f"moe.{leaf}" in _RULES:
+        return _RULES[f"moe.{leaf}"]
+    if leaf in _RULES:
+        return _RULES[leaf]
+    return ()  # replicate unknowns
+
+
+def _fit(spec: Tuple, shape: Tuple[int, ...],
+         axis_sizes: Dict[str, int]) -> Tuple:
+    """Pad/trim the rule to the rank and drop non-dividing axes."""
+    spec = tuple(spec) + (None,) * (len(shape) - len(spec))
+    spec = spec[:len(shape)]
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+        else:
+            size = axis_sizes.get(ax, 1)
+            out.append(ax if dim % size == 0 else None)
+    return tuple(out)
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    axis_sizes = dict(mesh.shape)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        rule = rule_for(names)
+        stacked = bool(names) and names[0] in SCANNED_GROUPS
+        core_shape = leaf.shape[1:] if stacked else leaf.shape
+        # expert-TP fallback: when the expert count does not divide the
+        # model axis (mixtral: 8 experts, 16-way TP), shard WITHIN each
+        # expert's FFN instead of replicating everything
+        if len(names) >= 2 and names[-2] == "moe" and len(core_shape) == 3 \
+                and core_shape[0] % axis_sizes.get("model", 1) != 0:
+            if names[-1] in ("w_up", "w_gate"):
+                rule = (None, None, "model")
+            elif names[-1] == "w_down":
+                rule = (None, "model", None)
+        if stacked:
+            rule = (None,) + tuple(rule)
+        return P(*_fit(rule, leaf.shape, axis_sizes))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(ax for ax in ("pod", "data") if ax in mesh.shape)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Tokens/labels: batch over all data axes."""
+    return P(data_axes(mesh))
+
+
+
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh, *,
+                seq_shard: bool = False,
+                kv_seq_model: bool = False) -> Any:
+    """KV caches: batch over data axes, kv-heads over model — unless
+    ``seq_shard`` (long-context: batch too small), which shards the
+    SEQUENCE dim over the data axes and heads over model (SP).
+    ``kv_seq_model`` (§Perf kv_seqshard): FlashDecoding-style — shard
+    the cache SEQUENCE over the model axis instead of kv-heads, so
+    few-kv-head archs stop replicating the cache 'model'-fold; the
+    softmax reductions become small all-reduces."""
+    axis_sizes = dict(mesh.shape)
+    daxes = data_axes(mesh)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        names = _path_names(path)
+        stacked = names and names[0] in SCANNED_GROUPS
+        core = shape[1:] if stacked else shape
+        if len(core) == 4 and names[-1] in ("k", "v"):  # [B,S,Hk,dh]
+            if seq_shard:
+                spec = (None, daxes, "model", None)
+            elif kv_seq_model:
+                spec = (daxes, "model", None, None)
+            else:
+                spec = (daxes, None,
+                        "model" if core[2] % axis_sizes.get("model", 1) == 0
+                        else None, None)
+        elif names[-1] == "ssm":  # [B,H,dh,N]
+            spec = (daxes if not seq_shard else None, "model", None, None)
+        elif names[-1] == "wkv":  # [B,H,dhk,dhv]
+            spec = (daxes if not seq_shard else None, "model", None, None)
+        elif names[-1] == "conv":  # [B,K-1,d_in]
+            spec = (daxes if not seq_shard else None, None, "model")
+        elif names[-1].startswith("shift"):  # [B,D]
+            spec = (daxes if not seq_shard else None, None)
+        else:
+            spec = (None,) * len(core)
+        spec = tuple(spec)
+        if stacked:
+            spec = (None,) + spec
+        # divisibility fallback
+        out = []
+        for dim, ax in zip(shape, spec):
+            if ax is None or ax == ():
+                out.append(None)
+                continue
+            size = 1
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                size *= axis_sizes.get(a, 1)
+            out.append(ax if dim % size == 0 else None)
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def zero_specs(param_specs_tree: Any, params_shape: Any, mesh: Mesh) -> Any:
+    """ZeRO-3: shard optimizer moments over the data axes along the
+    first evenly-dividing dimension not already sharded."""
+    axis_sizes = dict(mesh.shape)
+    daxes = data_axes(mesh)
+    dsize = 1
+    for a in daxes:
+        dsize *= axis_sizes[a]
+
+    def one(spec: P, leaf):
+        spec_t = tuple(spec) + (None,) * (len(leaf.shape) - len(spec))
+        out = list(spec_t)
+        for i, (dim, ax) in enumerate(zip(leaf.shape, spec_t)):
+            if ax is None and dim % dsize == 0:
+                out[i] = daxes if len(daxes) > 1 else daxes[0]
+                break
+        return P(*out)
+
+    return jax.tree_util.tree_map(one, param_specs_tree, params_shape,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory has kernel.py (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ops.py (jit'd public wrapper), and ref.py (the
+pure-jnp oracle it is validated against in interpret mode)."""

@@ -1,0 +1,5 @@
+from .kernel import clht_probe
+from .ops import batched_lookup
+from .ref import probe_ref
+
+__all__ = ["clht_probe", "batched_lookup", "probe_ref"]

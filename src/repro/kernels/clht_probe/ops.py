@@ -1,0 +1,46 @@
+"""jit'd wrapper: gather each query's probe window from the exported
+P-CLHT arrays (keys/vals/next as produced by PCLHT.export_arrays), then
+run the VPU compare kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import clht_probe
+
+SLOTS = 3
+CHAIN_DEPTH = 4  # probe window covers the bucket + up to 3 chained buckets
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
+def batched_lookup(queries, keys, vals, nxt, *, n_buckets: int,
+                   interpret: bool = True):
+    """queries: [Q] int32; keys/vals: [NB_total, SLOTS] int32;
+    nxt: [NB_total] int32 bucket index (-1 none).  Returns (found, val)."""
+    Q = queries.shape[0]
+    # splitmix-like 32-bit mix, mirroring core.clht._mix mod n_buckets
+    z = (queries.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    z = z ^ (z >> jnp.uint32(16))
+    b = (z % jnp.uint32(n_buckets)).astype(jnp.int32)
+    rows = [b]
+    cur = b
+    for _ in range(CHAIN_DEPTH - 1):
+        cur = jnp.where(cur >= 0, nxt[jnp.maximum(cur, 0)], -1)
+        rows.append(cur)
+    window_k, window_v = [], []
+    for r in rows:
+        safe = jnp.maximum(r, 0)
+        wk = jnp.where(r[:, None] >= 0, keys[safe], 0)
+        wv = jnp.where(r[:, None] >= 0, vals[safe], 0)
+        window_k.append(wk)
+        window_v.append(wv)
+    W = CHAIN_DEPTH * SLOTS
+    pad = 128 - W
+    bk = jnp.concatenate(window_k, axis=1)
+    bv = jnp.concatenate(window_v, axis=1)
+    bk = jnp.pad(bk, ((0, 0), (0, pad)))
+    bv = jnp.pad(bv, ((0, 0), (0, pad)))
+    return clht_probe(queries, bk, bv, interpret=interpret)

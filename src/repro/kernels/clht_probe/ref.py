@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the batched CLHT probe."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def probe_ref(queries, bucket_keys, bucket_vals):
+    """queries: [Q]; bucket_keys/vals: [Q, W] (the pre-gathered probe
+    window for each query: its bucket's slots + overflow-chain slots,
+    zero-padded).  Returns (found: [Q] bool, values: [Q])."""
+    hit = bucket_keys == queries[:, None]
+    found = jnp.any(hit, axis=1)
+    idx = jnp.argmax(hit, axis=1)
+    vals = jnp.take_along_axis(bucket_vals, idx[:, None], axis=1)[:, 0]
+    return found, jnp.where(found, vals, 0)

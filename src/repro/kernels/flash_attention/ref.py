@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q: [B,H,T,dh]; k,v: [B,H,S,dh] (kv heads already repeated).
+    fp32 softmax, output in q.dtype."""
+    B, H, T, dh = q.shape
+    S = k.shape[2]
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        q_pos = jnp.arange(T)[:, None] + (S - T)  # right-aligned queries
+        k_pos = jnp.arange(S)[None, :]
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", w.astype(v.dtype), v)

@@ -1,0 +1,5 @@
+from .kernel import ssd
+from .ops import ssd_heads
+from .ref import ssd_ref
+
+__all__ = ["ssd", "ssd_heads", "ssd_ref"]

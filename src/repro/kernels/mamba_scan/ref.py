@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: the selective-scan recurrence, step by step."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, B_, C_, A):
+    """x: [BH,T,dh]; dt: [BH,T]; B_,C_: [BH,T,N]; A: scalar decay (<0)
+    per head folded into BH... here per-row: A: [BH].
+        h_t = exp(dt_t A) h_{t-1} + dt_t B_t ⊗ x_t;   y_t = C_t · h_t
+    Returns (y: [BH,T,dh], final h [BH,dh,N])."""
+    BH, T, dh = x.shape
+    N = B_.shape[-1]
+
+    def step(h, xs):
+        xt, dtt, bt, ct = xs
+        decay = jnp.exp(dtt * A)  # [BH]
+        upd = dtt[:, None, None] * xt[:, :, None] * bt[:, None, :]
+        h = decay[:, None, None] * h + upd
+        y = jnp.einsum("bn,bdn->bd", ct, h)
+        return h, y
+
+    xs = (x.swapaxes(0, 1), dt.swapaxes(0, 1), B_.swapaxes(0, 1),
+          C_.swapaxes(0, 1))
+    h0 = jnp.zeros((BH, dh, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), h

@@ -1,0 +1,5 @@
+from .kernel import paged_attention
+from .ops import paged_mqa
+from .ref import paged_attention_ref
+
+__all__ = ["paged_attention", "paged_mqa", "paged_attention_ref"]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kv_pages_k, kv_pages_v, block_table, seq_lens):
+    """q: [B,H,dh]; kv_pages_*: [NP, PS, H, dh]; block_table: [B, MAXP]
+    (physical page per logical page, -1 = unused); seq_lens: [B].
+    Returns [B,H,dh]."""
+    B, H, dh = q.shape
+    NP, PS = kv_pages_k.shape[:2]
+    MAXP = block_table.shape[1]
+    safe = jnp.maximum(block_table, 0)
+    k = kv_pages_k[safe]  # [B, MAXP, PS, H, dh]
+    v = kv_pages_v[safe]
+    k = k.reshape(B, MAXP * PS, H, dh)
+    v = v.reshape(B, MAXP * PS, H, dh)
+    pos = jnp.arange(MAXP * PS)[None]
+    valid = pos < seq_lens[:, None]
+    s = jnp.einsum("bhd,bshd->bhs", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    s = jnp.where(valid[:, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w.astype(v.dtype), v)

@@ -1,0 +1,5 @@
+from .kernel import wkv6
+from .ops import wkv6_heads
+from .ref import wkv6_ref
+
+__all__ = ["wkv6", "wkv6_heads", "wkv6_ref"]

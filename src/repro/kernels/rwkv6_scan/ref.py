@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: the RWKV6 recurrence, step by step."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u):
+    """r,k,v,logw: [BH, T, dh]; u: [dh] bonus. Sequential recurrence:
+        o_t = r_t · (S_{t-1} + u ⊙ k_t^T v_t);  S_t = w_t ⊙ S_{t-1} + k_t^T v_t
+    Returns (o: [BH,T,dh], final state [BH,dh,dh])."""
+    BH, T, dh = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[:, :, None] * vt[:, None, :]  # [BH, dh_k, dh_v]
+        o = jnp.einsum("bk,bkv->bv", rt, S + u[None, :, None] * kv)
+        S = jnp.exp(wt)[:, :, None] * S + kv
+        return S, o
+
+    xs = tuple(a.swapaxes(0, 1) for a in (r, k, v, logw))
+    S0 = jnp.zeros((BH, dh, dh), jnp.float32)
+    S, os = jax.lax.scan(step, S0, xs)
+    return os.swapaxes(0, 1), S

@@ -1,0 +1,24 @@
+"""Production mesh: 16×16 = 256 chips per pod (v5e), 2 pods = 512.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set
+``xla_force_host_platform_device_count`` before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)

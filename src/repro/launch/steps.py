@@ -1,0 +1,339 @@
+"""Step builders + ShapeDtypeStruct input specs for every
+(architecture × shape) cell — the objects the dry-run lowers and the
+trainers/servers execute.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable stand-ins, no device allocation.  ``train_step`` lowers for
+train_* shapes; ``decode_step`` (one new token against a seq_len KV
+cache) for decode_*/long_* shapes; ``prefill_step`` for prefill_*.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeCfg
+from ..distributed import sharding as shard_rules
+from ..models.model import LM, build_model
+from ..optim import adamw, schedules
+
+Params = Any
+
+
+# ----------------------------------------------------------------------
+# step functions
+# ----------------------------------------------------------------------
+def make_train_step(model: LM, arch_name: str, *,
+                    total_steps: int = 10_000) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        lr = schedules.for_arch(arch_name, opt_state.step + 1,
+                                total=total_steps)
+        new_params, new_state = adamw.update(grads, opt_state, params, lr=lr)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_prefill_step(model: LM, seq_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, seq_len)
+
+    return prefill_step
+
+
+def make_decode_step(model: LM, *, with_enc: bool = False) -> Callable:
+    if with_enc:
+        def decode_step(params, token, caches, pos, enc):
+            return model.decode_step(params, token, caches, pos, enc=enc)
+    else:
+        def decode_step(params, token, caches, pos):
+            return model.decode_step(params, token, caches, pos)
+    return decode_step
+
+
+# ----------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocated)
+# ----------------------------------------------------------------------
+def _tok(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def batch_specs(cfg: ArchConfig, B: int, T: int) -> Dict[str, Any]:
+    batch: Dict[str, Any] = {}
+    t_text = T
+    if cfg.vision is not None:
+        t_text = T - cfg.vision.n_patches
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision.n_patches, cfg.vision.d_vit), jnp.bfloat16)
+    if cfg.encdec is not None:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encdec.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    batch["tokens"] = _tok((B, t_text))
+    batch["labels"] = _tok((B, t_text))
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg,
+                model: Optional[LM] = None) -> Dict[str, Any]:
+    """Stand-ins for every model input of this cell."""
+    model = model or build_model(cfg)
+    B, T = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, B, T)}
+    # decode: one new token against a seq_len cache
+    spec = {
+        "token": _tok((B,)),
+        "caches": jax.eval_shape(
+            functools.partial(model.init_caches, B, T)),
+        "pos": _tok((B,)),
+    }
+    if cfg.encdec is not None:
+        spec["enc"] = jax.ShapeDtypeStruct(
+            (B, cfg.encdec.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+# ----------------------------------------------------------------------
+# shardings per cell
+# ----------------------------------------------------------------------
+def cell_shardings(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                   model: LM, specs: Dict[str, Any],
+                   variants: frozenset = frozenset()) -> Dict[str, Any]:
+    """PartitionSpec pytrees for params / opt state / inputs."""
+    if "dp_only" in variants:
+        # small models: TP wastes collectives and replicates attention
+        # scores when heads don't divide the axis — run pure DP over the
+        # WHOLE mesh with fully-sharded (ZeRO-3) optimizer state
+        all_axes = tuple(mesh.shape.keys())
+        pspecs = jax.tree.map(lambda s: P(*(None,) * len(s.shape)),
+                              model.params_spec())
+        out: Dict[str, Any] = {"params": pspecs}
+        if shape.kind in ("train", "prefill"):
+            out["batch"] = jax.tree.map(
+                lambda s: P(all_axes, *(None,) * (len(s.shape) - 1)),
+                specs["batch"])
+        else:
+            out["token"] = P(all_axes)
+            out["pos"] = P(all_axes)
+            out["caches"] = jax.tree.map(
+                lambda s: P(*(((all_axes,) + (None,) * (len(s.shape) - 1))
+                              if s.shape and s.shape[0] % mesh.size == 0
+                              else (None,) * len(s.shape))),
+                specs["caches"])
+        if shape.kind == "train":
+            opt_shape = adamw.init_spec(model.params_spec())
+            zspec = lambda tree: jax.tree.map(
+                lambda s: P(*((all_axes,) + (None,) * (len(s.shape) - 1))
+                            if s.shape and s.shape[0] % mesh.size == 0
+                            else (None,) * len(s.shape)), tree)
+            out["opt"] = adamw.AdamWState(
+                step=P(), m=zspec(opt_shape.m), v=zspec(opt_shape.v),
+                master=zspec(opt_shape.master))
+        return out
+    pspecs = shard_rules.param_specs(model.params_spec(), mesh)
+    out: Dict[str, Any] = {"params": pspecs}
+    daxes = shard_rules.data_axes(mesh)
+    if shape.kind in ("train", "prefill"):
+        out["batch"] = jax.tree.map(
+            lambda s: P(daxes, *(None,) * (len(s.shape) - 1)),
+            specs["batch"])
+    else:
+        seq_shard = shape.name.startswith("long")  # SP for 500k decode
+        out["token"] = P(daxes if not seq_shard else None)
+        out["pos"] = P(daxes if not seq_shard else None)
+        out["caches"] = shard_rules.cache_specs(
+            specs["caches"], mesh, seq_shard=seq_shard,
+            kv_seq_model="kv_seqshard" in variants)
+        if "enc" in specs:
+            out["enc"] = P(daxes, None, None) if not seq_shard \
+                else P(None, None, None)
+    if shape.kind == "train":
+        opt_spec_shape = adamw.init_spec(model.params_spec())
+        out["opt"] = adamw.AdamWState(
+            step=P(),
+            m=shard_rules.zero_specs(pspecs, opt_spec_shape.m, mesh),
+            v=shard_rules.zero_specs(pspecs, opt_spec_shape.v, mesh),
+            master=shard_rules.zero_specs(pspecs, opt_spec_shape.master,
+                                          mesh),
+        )
+    return out
+
+
+def named_tree(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ----------------------------------------------------------------------
+# lower one cell: returns (lowered, compiled)
+# ----------------------------------------------------------------------
+def apply_variants(cfg: ArchConfig, variants: frozenset) -> ArchConfig:
+    import dataclasses as _dc
+    from ..models import attention as _attn
+    if "moe_sorted" in variants and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, impl="sorted"))
+    if "cf1" in variants and cfg.moe is not None:
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe,
+                                               capacity_factor=1.0))
+    _attn.SCORE_DTYPE = jnp.bfloat16 if "scores_bf16" in variants else None
+    return cfg
+
+
+def lower_cell(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh, *,
+               donate: bool = True, variants: frozenset = frozenset()):
+    cfg = apply_variants(cfg, variants)
+    model = build_model(cfg)
+    if "kv_int8" in variants:
+        model.cache_dtype = jnp.int8
+    specs = input_specs(cfg, shape, model)
+    shardings = cell_shardings(cfg, shape, mesh, model, specs, variants)
+    if shape.kind == "train":
+        step = make_train_step(model, cfg.name)
+        opt_shape = adamw.init_spec(model.params_spec())
+        args = (model.params_spec(), opt_shape, specs["batch"])
+        in_shardings = (named_tree(mesh, shardings["params"]),
+                        named_tree(mesh, shardings["opt"]),
+                        named_tree(mesh, shardings["batch"]))
+        jitted = jax.jit(step, in_shardings=in_shardings,
+                         donate_argnums=(0, 1) if donate else ())
+        return jitted.lower(*args), model
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, shape.seq_len)
+        args = (model.params_spec(), specs["batch"])
+        in_shardings = (named_tree(mesh, shardings["params"]),
+                        named_tree(mesh, shardings["batch"]))
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        return jitted.lower(*args), model
+    # decode
+    with_enc = cfg.encdec is not None
+    step = make_decode_step(model, with_enc=with_enc)
+    args = [model.params_spec(), specs["token"], specs["caches"],
+            specs["pos"]]
+    in_sh = [named_tree(mesh, shardings["params"]),
+             named_tree(mesh, shardings["token"]),
+             named_tree(mesh, shardings["caches"]),
+             named_tree(mesh, shardings["pos"])]
+    if with_enc:
+        args.append(specs["enc"])
+        in_sh.append(named_tree(mesh, shardings["enc"]))
+    jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                     donate_argnums=(2,) if donate else ())
+    return jitted.lower(*args), model
+
+
+# ----------------------------------------------------------------------
+# per-group probe programs (scan-body costs, for roofline correction)
+# ----------------------------------------------------------------------
+def group_probes(cfg: ArchConfig, shape: ShapeCfg, mesh: Mesh,
+                 variants: frozenset = frozenset()):
+    """For each scanned group with repeat > 1, lower ONE application of
+    its body with the same per-layer shardings, in the right mode
+    (train: fwd+bwd; prefill: fwd; decode: one-token).  Returns
+    [(group_name, repeat - 1, lowered)]."""
+    from ..models.model import _apply_block  # local import to avoid cycle
+    cfg = apply_variants(cfg, variants)
+    model = build_model(cfg)
+    if "kv_int8" in variants:
+        model.cache_dtype = jnp.int8
+    B, T = shape.global_batch, shape.seq_len
+    out = []
+    if "dp_only" in variants:
+        all_axes = tuple(mesh.shape.keys())
+        full_pspecs = jax.tree.map(lambda s: P(*(None,) * len(s.shape)),
+                                   model.params_spec())
+    else:
+        full_pspecs = shard_rules.param_specs(model.params_spec(), mesh)
+    for gname, pattern, repeat in model.plan:
+        if repeat <= 1:
+            continue
+        gshape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+            model.params_spec()[gname])
+        gspec = jax.tree.map(lambda sp: P(*tuple(sp)[1:]),
+                             full_pspecs[gname],
+                             is_leaf=lambda x: isinstance(x, P))
+        daxes = tuple(mesh.shape.keys()) if "dp_only" in variants \
+            else shard_rules.data_axes(mesh)
+        if shape.kind in ("train", "prefill"):
+            t_text = T if cfg.vision is None else T  # body sees full seq
+            x_spec = jax.ShapeDtypeStruct((B, t_text, cfg.d_model),
+                                          jnp.bfloat16)
+            x_sh = P(daxes, None, None)
+
+            enc_args, enc_sh = (), ()
+            if cfg.encdec is not None:
+                enc_args = (jax.ShapeDtypeStruct(
+                    (B, cfg.encdec.n_audio_frames, cfg.d_model),
+                    jnp.bfloat16),)
+                enc_sh = (NamedSharding(mesh, x_sh),)
+
+            def body_fwd(lp, x, *enc):
+                e = enc[0] if enc else None
+                for i, (m, f) in enumerate(pattern):
+                    x, _ = _apply_block(cfg, m, f, lp[f"l{i}"], x, enc=e)
+                return x
+
+            if shape.kind == "train":
+                def probe(lp, x, *enc):
+                    def lo(lp_, x_):
+                        return jnp.sum(body_fwd(lp_, x_, *enc)
+                                       .astype(jnp.float32))
+                    g = jax.grad(lo, argnums=(0, 1))(lp, x)
+                    return g
+            else:
+                probe = body_fwd
+            lowered = jax.jit(probe, in_shardings=(
+                named_tree(mesh, gspec),
+                NamedSharding(mesh, x_sh)) + enc_sh).lower(
+                    gshape, x_spec, *enc_args)
+        else:
+            x_spec = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+            seq_shard = shape.name.startswith("long")
+            cache_shape = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+                input_specs(cfg, shape, model)["caches"][gname])
+            cache_spec = jax.tree.map(
+                lambda sp: P(*tuple(sp)[1:]),
+                shard_rules.cache_specs(
+                    input_specs(cfg, shape, model)["caches"], mesh,
+                    seq_shard=seq_shard)[gname],
+                is_leaf=lambda x: isinstance(x, P))
+            pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+            x_sh = P(daxes if not seq_shard else None, None, None)
+            if cfg.encdec is not None:
+                enc_spec = jax.ShapeDtypeStruct(
+                    (B, cfg.encdec.n_audio_frames, cfg.d_model),
+                    jnp.bfloat16)
+
+                def probe(lp, x, lc, pos, enc):
+                    for i, (m, f) in enumerate(pattern):
+                        x, _ = model._decode_block(lp[f"l{i}"], x, m, f,
+                                                   lc.get(f"l{i}"), pos, enc)
+                    return x
+
+                lowered = jax.jit(probe, in_shardings=(
+                    named_tree(mesh, gspec), NamedSharding(mesh, x_sh),
+                    named_tree(mesh, cache_spec),
+                    NamedSharding(mesh, P(daxes if not seq_shard else None)),
+                    NamedSharding(mesh, x_sh),
+                )).lower(gshape, x_spec, cache_shape, pos_spec, enc_spec)
+            else:
+                def probe(lp, x, lc, pos):
+                    for i, (m, f) in enumerate(pattern):
+                        x, _ = model._decode_block(lp[f"l{i}"], x, m, f,
+                                                   lc.get(f"l{i}"), pos, None)
+                    return x
+
+                lowered = jax.jit(probe, in_shardings=(
+                    named_tree(mesh, gspec), NamedSharding(mesh, x_sh),
+                    named_tree(mesh, cache_spec),
+                    NamedSharding(mesh, P(daxes if not seq_shard else None)),
+                )).lower(gshape, x_spec, cache_shape, pos_spec)
+        out.append((gname, repeat - 1, lowered))
+    return out

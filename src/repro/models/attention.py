@@ -1,0 +1,198 @@
+"""GQA attention: train/prefill (full or sliding-window causal) and
+single-token decode against a KV cache.
+
+The reference path is pure jnp (XLA fuses it well and it is what the
+multi-pod dry-run lowers); ``repro.kernels.flash_attention`` is the
+Pallas TPU kernel with the same semantics, validated against this
+module's math in interpret mode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, causal_mask, dense_init, split_key
+
+Params = Dict[str, Any]
+
+
+def init_attn(key, cfg) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    ks = split_key(key, "q", "k", "v", "o")
+    p = {
+        "wq": dense_init(ks["q"], (d, h * dh)),
+        "wk": dense_init(ks["k"], (d, hk * dh)),
+        "wv": dense_init(ks["v"], (d, hk * dh)),
+        "wo": dense_init(ks["o"], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((hk * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((hk * dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, ...]:
+    B, T, _ = x.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("btd,dh->bth", x, p["wk"])
+    v = jnp.einsum("btd,dh->bth", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, T, cfg.n_heads, dh)
+    k = k.reshape(B, T, cfg.n_kv_heads, dh)
+    v = v.reshape(B, T, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+QUERY_BLOCK = 4096  # blocked attention: bounds the live score workspace
+KV_QSCALE = 32.0  # int8 KV-cache quantization scale (kv_int8 variant)
+SCORE_DTYPE = None  # scores_bf16 variant sets jnp.bfloat16 (halves the
+#                     materialized [T,T] score traffic; max/sum stay fp32)
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: Optional[jnp.ndarray], n_rep: int,
+          *, causal_blocked: bool = False,
+          window: Optional[int] = None) -> jnp.ndarray:
+    """q:[B,T,H,dh] k,v:[B,S,Hk,dh]; GQA by reshaping q into kv groups.
+
+    Queries are processed in unrolled blocks of ``QUERY_BLOCK`` so the
+    score tensor workspace is O(T·QUERY_BLOCK), not O(T²); with
+    ``causal_blocked`` each query block only visits keys up to its end
+    (and past its window start), saving ~2× attention FLOPs.  Unrolled
+    (not scanned) on purpose: the dry-run's HLO cost analysis then
+    counts every block.  The Pallas flash_attention kernel is the
+    TPU-tiled equivalent of this same math."""
+    B, T, H, dh = q.shape
+    S, Hk = k.shape[1], k.shape[2]
+    q = q.reshape(B, T, Hk, n_rep, dh)
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qb = min(QUERY_BLOCK, T)
+    outs = []
+    for q0 in range(0, T, qb):
+        q1 = min(q0 + qb, T)
+        if causal_blocked:
+            kv1 = q1  # keys after the block's last query never attend
+            kv0 = 0 if window is None else max(0, q0 - window)
+        else:
+            kv0, kv1 = 0, S
+        qi = q[:, q0:q1]
+        ki, vi = k[:, kv0:kv1], v[:, kv0:kv1]
+        sdt = SCORE_DTYPE or jnp.float32
+        scores = jnp.einsum("bthrd,bshd->bhrts", qi, ki,
+                            preferred_element_type=sdt)
+        scores = scores * jnp.asarray(scale, sdt)
+        if mask is not None:
+            mi = mask[q0:q1, kv0:kv1]
+            scores = jnp.where(mi[None, None, None], scores,
+                               jnp.asarray(-1e30 if sdt == jnp.float32
+                                           else -3e38, sdt))
+        # max/sum reductions in fp32 even when scores are bf16
+        m = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+        p_ = jnp.exp(scores.astype(jnp.float32) - m)
+        w = (p_ / jnp.sum(p_, axis=-1, keepdims=True)).astype(v.dtype)
+        outs.append(jnp.einsum("bhrts,bshd->bthrd", w, vi))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(B, T, H * dh)
+
+
+def attn_forward(p: Params, x: jnp.ndarray, cfg, *,
+                 positions: Optional[jnp.ndarray] = None,
+                 mask: Optional[jnp.ndarray] = None,
+                 causal: bool = True) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill / encoder)."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if mask is None and causal:
+        mask = causal_mask(T, T, window=cfg.sliding_window)
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads,
+                causal_blocked=causal, window=cfg.sliding_window)
+    return jnp.einsum("bth,hd->btd", out, p["wo"])
+
+
+def attn_prefill(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Params]:
+    """Prefill: forward + return the KV cache for this layer."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    positions = jnp.arange(T)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = causal_mask(T, T, window=cfg.sliding_window)
+    out = _sdpa(q, k, v, mask, cfg.n_heads // cfg.n_kv_heads,
+                causal_blocked=True, window=cfg.sliding_window)
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(p: Params, x: jnp.ndarray, cache: Params, cfg, *,
+                pos: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode. x: [B,1,D]; cache k/v: [B,S,Hk,dh]; pos: [B]
+    (current absolute position; cache slots >= pos are invalid)."""
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(p, x, cfg)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    # int8-quantized KV cache (§Perf kv_int8): halves decode's dominant
+    # HBM term; dequant fuses into the attention dot
+    quant = cache["k"].dtype == jnp.int8
+    if quant:
+        qz = lambda a: jnp.clip(jnp.round(a.astype(jnp.float32) * KV_QSCALE),
+                                -127, 127).astype(jnp.int8)
+        k_new, v_new = qz(k_new), qz(v_new)
+    else:
+        k_new = k_new.astype(cache["k"].dtype)
+        v_new = v_new.astype(cache["v"].dtype)
+    # functional cache update at position `pos` (in-place via donation)
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))
+    k = upd(cache["k"], k_new, pos)
+    v = upd(cache["v"], v_new, pos)
+    new_cache = {"k": k, "v": v}
+    if quant:
+        k = k.astype(jnp.bfloat16) * (1.0 / KV_QSCALE)
+        v = v.astype(jnp.bfloat16) * (1.0 / KV_QSCALE)
+    kpos = jnp.arange(S)[None, :]
+    valid = kpos <= pos[:, None]
+    if cfg.sliding_window is not None:
+        valid &= kpos > (pos[:, None] - cfg.sliding_window)
+    dh = cfg.head_dim
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    Hk = cfg.n_kv_heads
+    qh = q.reshape(B, 1, Hk, n_rep, dh)
+    scores = jnp.einsum("bthrd,bshd->bhrts", qh, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhrts,bshd->bthrd", w, v).reshape(B, 1, -1)
+    y = jnp.einsum("bth,hd->btd", out, p["wo"])
+    return y, new_cache
+
+
+def init_cross_attn(key, cfg) -> Params:
+    return init_attn(key, cfg)
+
+
+def cross_attn_forward(p: Params, x: jnp.ndarray, enc: jnp.ndarray,
+                       cfg) -> jnp.ndarray:
+    """Decoder→encoder cross attention (whisper); no RoPE, no mask."""
+    B, T, _ = x.shape
+    S = enc.shape[1]
+    dh = cfg.head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"]).reshape(B, T, cfg.n_heads, dh)
+    k = jnp.einsum("bsd,dh->bsh", enc, p["wk"]).reshape(B, S, cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,dh->bsh", enc, p["wv"]).reshape(B, S, cfg.n_kv_heads, dh)
+    out = _sdpa(q, k, v, None, cfg.n_heads // cfg.n_kv_heads)
+    return jnp.einsum("bth,hd->btd", out, p["wo"])

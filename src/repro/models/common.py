@@ -1,0 +1,91 @@
+"""Shared model building blocks (pure JAX, params as nested dicts)."""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def norm(x: jnp.ndarray, p: Params, kind: str, eps: float) -> jnp.ndarray:
+    if kind == "layernorm":
+        return layernorm(x, p["w"], p["b"], eps)
+    return rmsnorm(x, p["w"], eps)
+
+
+def norm_params(key, d: int, kind: str) -> Params:
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32)}
+
+
+def dense_init(key, shape: Tuple[int, ...], scale: Optional[float] = None,
+               dtype=jnp.bfloat16) -> jnp.ndarray:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [..., T, H, Dh]; positions: [..., T] (broadcastable)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.stack([out1, out2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def split_key(key, *names: str) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def causal_mask(q_len: int, kv_len: int, *, window: Optional[int] = None,
+                q_offset: int = 0) -> jnp.ndarray:
+    """[q_len, kv_len] boolean mask (True = attend). ``q_offset`` is the
+    absolute position of query 0 (for prefill continuation/decode)."""
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

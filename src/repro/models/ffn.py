@@ -1,0 +1,172 @@
+"""FFN layers: dense MLP (SwiGLU / GELU) and GShard-style MoE with
+capacity-factor dispatch (EP: the expert dimension shards over the
+``model`` mesh axis).
+
+Supports the two assigned MoE flavors:
+* mixtral-8x22b — 8 large experts, top-2;
+* deepseek-moe-16b — fine-grained: 64 small routed experts top-6 PLUS
+  2 always-on shared experts (arXiv:2401.06066 §3).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_key
+
+Params = Dict[str, Any]
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str) -> Params:
+    ks = split_key(key, "up", "down", "gate")
+    p = {"w_up": dense_init(ks["up"], (d_model, d_ff)),
+         "w_down": dense_init(ks["down"], (d_ff, d_model))}
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks["gate"], (d_model, d_ff))
+    return p
+
+
+def mlp_forward(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    up = jnp.einsum("btd,df->btf", x, p["w_up"])
+    if kind == "swiglu":
+        gate = jnp.einsum("btd,df->btf", x, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("btf,fd->btd", h, p["w_down"])
+
+
+def init_moe(key, cfg) -> Params:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = split_key(key, "router", "up", "down", "gate", "s_up", "s_down",
+                   "s_gate")
+    p = {
+        "router": dense_init(ks["router"], (d, m.n_experts), scale=0.02),
+        "w_up": dense_init(ks["up"], (m.n_experts, d, m.d_expert)),
+        "w_down": dense_init(ks["down"], (m.n_experts, m.d_expert, d)),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(ks["gate"], (m.n_experts, d, m.d_expert))
+    if m.n_shared:
+        p["shared"] = init_mlp(ks["s_up"], d, m.n_shared * m.d_expert, cfg.mlp)
+    return p
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray,
+                                                         jnp.ndarray]:
+    impl = getattr(cfg.moe, "impl", "gshard")
+    if impl == "sorted":
+        return moe_forward_sorted(p, x, cfg)
+    return moe_forward_gshard(p, x, cfg)
+
+
+def moe_forward_gshard(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray,
+                                                                jnp.ndarray]:
+    """Top-k capacity-limited dispatch (GShard).  Returns (y, aux_loss).
+
+    Dispatch einsums keep an explicit expert dimension E so GSPMD can
+    shard it over the ``model`` axis (expert parallelism); tokens move
+    via the all-to-all the partitioner inserts for the dispatch/combine
+    einsums.
+    """
+    m = cfg.moe
+    B, T, D = x.shape
+    S = B * T
+    E, K = m.n_experts, m.top_k
+    # ceil + floor of K so tiny decode batches never drop tokens
+    cap = max(K, -(-int(m.capacity_factor * S * K) // E))
+    xt = x.reshape(S, D)
+    logits = jnp.einsum("sd,de->se", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, K)  # [S,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # position of each (token, k) within its expert's buffer
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.int32)  # [S,K,E]
+    flat = onehot.reshape(S * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat).reshape(S, K, E)
+    within_cap = (pos_in_expert < cap) & (onehot > 0)
+    # dispatch tensor [S,E,cap]
+    pos_oh = jax.nn.one_hot(jnp.sum(pos_in_expert * onehot, axis=-1),
+                            cap, dtype=x.dtype)  # [S,K,cap]
+    disp = jnp.einsum("ske,skc->sec",
+                      (within_cap).astype(x.dtype) * onehot.astype(x.dtype),
+                      pos_oh)
+    comb = jnp.einsum("ske,skc,sk->sec",
+                      (within_cap).astype(jnp.float32) * onehot.astype(jnp.float32),
+                      pos_oh.astype(jnp.float32), gate_vals).astype(x.dtype)
+    # expert buffers [E,cap,D] — the all-to-all boundary under EP
+    buf = jnp.einsum("sec,sd->ecd", disp, xt)
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    y = jnp.einsum("sec,ecd->sd", comb, out).reshape(B, T, D)
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x, cfg.mlp)
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    density = jnp.mean(onehot.sum(1).astype(jnp.float32), axis=0)  # [E]
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density / K * router_prob)
+    return y, aux
+
+
+def moe_forward_sorted(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray,
+                                                                jnp.ndarray]:
+    """Sort-based dispatch (§Perf optimization over GShard's one-hot
+    einsums).  The one-hot dispatch/combine matmuls cost
+    O(S·E·cap·D) FLOPs — for fine-grained MoE that DWARFS the expert
+    FFNs themselves (measured: mixtral/deepseek useful-FLOPs ratio
+    ≈ 0.00 at baseline).  Sorting token assignments by expert and
+    scatter/gathering buffers costs O(S·K·(log S + D)): the expert
+    matmuls become the only O(F) term, as they should be."""
+    m = cfg.moe
+    B, T, D = x.shape
+    S = B * T
+    E, K = m.n_experts, m.top_k
+    cap = max(K, -(-int(m.capacity_factor * S * K) // E))
+    xt = x.reshape(S, D)
+    logits = jnp.einsum("sd,de->se", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, K)  # [S,K]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+    flat_e = experts.reshape(S * K)
+    order = jnp.argsort(flat_e)  # stable: ties keep token order
+    sorted_e = flat_e[order]
+    # position of each assignment within its expert's buffer
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(S * K) - starts[sorted_e]
+    within = pos < cap
+    slot = jnp.where(within, sorted_e * cap + pos, E * cap)  # overflow bin
+    token = order // K
+    # scatter tokens into expert buffers [E*cap(+1 overflow), D]
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    buf = buf.at[slot].set(xt[token])
+    ebuf = buf[:E * cap].reshape(E, cap, D)
+    up = jnp.einsum("ecd,edf->ecf", ebuf, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("ecd,edf->ecf", ebuf, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    flat_out = jnp.concatenate(
+        [out.reshape(E * cap, D), jnp.zeros((1, D), out.dtype)], axis=0)
+    # gather back per assignment, weight by gate, sum over K
+    contrib = flat_out[slot] * gate_vals.reshape(S * K)[order][:, None] \
+        .astype(out.dtype)
+    y = jnp.zeros((S, D), out.dtype).at[token].add(contrib)
+    y = y.reshape(B, T, D)
+    if "shared" in p:
+        y = y + mlp_forward(p["shared"], x, cfg.mlp)
+    onehot = jax.nn.one_hot(experts, E, dtype=jnp.float32)
+    density = jnp.mean(onehot.sum(1), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(density / K * router_prob)
+    return y, aux

@@ -1,0 +1,184 @@
+"""Mamba block in the SSD (state-space duality) chunked form — the
+TPU-native adaptation of the selective scan (DESIGN.md §2).
+
+GPU Mamba fuses a sequential selective scan into one kernel; on TPU the
+matmul-form SSD algorithm (Mamba-2) is the right shape for the MXU:
+split the sequence into chunks of C tokens, compute intra-chunk outputs
+as (decay-masked) attention-like matmuls, carry inter-chunk states with
+a log-depth ``associative_scan`` (so the step lowers with NO while loop
+— which also keeps HLO cost analysis exact).  Decode keeps an O(1)
+recurrent state per layer: (conv tail, SSM state [H, dh, N]).
+
+Multi-head scalar decay (head_dim channels share one a_t) is the
+Mamba-2 simplification we adopt; Jamba's Mamba-1 per-channel decay is a
+diagonal refinement orthogonal to the system's structure (DESIGN §10).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, split_key
+
+Params = Dict[str, Any]
+
+
+def init_mamba(key, cfg) -> Params:
+    m = cfg.mamba
+    d = cfg.d_model
+    d_in = m.expand * d
+    H = d_in // m.head_dim
+    ks = split_key(key, "in", "conv", "bc", "dt", "out", "A", "D")
+    return {
+        "w_in": dense_init(ks["in"], (d, 2 * d_in)),  # x and gate z
+        "w_conv": dense_init(ks["conv"], (m.d_conv, d_in), scale=0.5),
+        "w_bc": dense_init(ks["bc"], (d_in, 2 * m.d_state)),
+        "w_dt": dense_init(ks["dt"], (d_in, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "w_out": dense_init(ks["out"], (d_in, d)),
+    }
+
+
+def _conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv, kernel size K. x: [B,T,D], w: [K,D]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1]] * w[i]
+    return out
+
+
+def _ssd_chunked(xh, dt, B_, C_, A, chunk: int):
+    """SSD scan.  xh: [B,T,H,dh]; dt: [B,T,H]; B_,C_: [B,T,N]; A: [H]<0.
+    Returns y: [B,T,H,dh] and the final state [B,H,dh,N]."""
+    Bsz, T, H, dh = xh.shape
+    N = B_.shape[-1]
+    C = min(chunk, T)
+    pad = (-T) % C
+    if pad:
+        # dt=0 at padded positions: no state update and no decay
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        T_out, T = T, T + pad
+    else:
+        T_out = T
+    NC = T // C
+    assert NC * C == T, (T, C)
+    # log-decay per step: l_t = dt_t * A  (<= 0)
+    ldec = dt * A  # [B,T,H]
+    xs = xh.reshape(Bsz, NC, C, H, dh)
+    Bs = B_.reshape(Bsz, NC, C, N)
+    Cs = C_.reshape(Bsz, NC, C, N)
+    dts = dt.reshape(Bsz, NC, C, H)
+    ls = ldec.reshape(Bsz, NC, C, H)
+    cum = jnp.cumsum(ls, axis=2)  # [B,NC,C,H] decay from chunk start
+    total = cum[:, :, -1]  # [B,NC,H]
+    # --- intra-chunk: attention-like causal matmul with decay mask
+    # score[t,s] = C_t·B_s * exp(cum_t - cum_s) * dt_s   for s <= t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,NC,C(t),C(s),H]
+    causal = jnp.tril(jnp.ones((C, C), bool))
+    gmask = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    scores = jnp.einsum("bgtn,bgsn->bgts", Cs, Bs)[..., None]  # [B,NC,t,s,1]
+    w = scores * jnp.exp(gmask) * dts[:, :, None, :, :]  # [B,NC,t,s,H]
+    y_intra = jnp.einsum("bgtsh,bgshd->bgthd", w.astype(xh.dtype), xs)
+    # --- chunk summary states: S_g = sum_s exp(total - cum_s) dt_s B_s x_s
+    decay_to_end = jnp.exp(total[:, :, None] - cum)  # [B,NC,C,H]
+    S = jnp.einsum("bgsh,bgsn,bgshd->bghdn",
+                   (decay_to_end * dts).astype(xh.dtype), Bs.astype(xh.dtype),
+                   xs)  # [B,NC,H,dh,N]
+    # --- inter-chunk: h_g = exp(total_g) h_{g-1} + S_g  (associative)
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da + db, sb + sa * jnp.exp(db)[..., None, None]
+    decays = total.swapaxes(0, 1)  # [NC,B,H]
+    states = S.swapaxes(0, 1)  # [NC,B,H,dh,N]
+    dcum, hcum = jax.lax.associative_scan(combine, (decays, states.astype(jnp.float32)))
+    # state ENTERING chunk g = hcum[g-1]
+    h_in = jnp.concatenate([jnp.zeros_like(hcum[:1]), hcum[:-1]], axis=0)
+    h_in = h_in.swapaxes(0, 1)  # [B,NC,H,dh,N]
+    # --- inter contribution: y_t += C_t · (exp(cum_t) h_in)
+    y_inter = jnp.einsum("bgtn,bgthdn->bgthd", Cs.astype(jnp.float32),
+                         jnp.exp(cum)[..., None, None] * h_in[:, :, None])
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, T, H, dh)
+    y = y[:, :T_out]
+    final = hcum[-1]  # [B,H,dh,N]
+    return y.astype(xh.dtype), final.astype(jnp.float32)
+
+
+def mamba_forward(p: Params, x: jnp.ndarray, cfg, *,
+                  return_state: bool = False):
+    """Train/prefill path. x: [B,T,D]."""
+    m = cfg.mamba
+    B, T, D = x.shape
+    d_in = m.expand * D
+    H = d_in // m.head_dim
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = _conv1d(xs, p["w_conv"])
+    xs = jax.nn.silu(xs)
+    bc = jnp.einsum("bte,en->btn", xs, p["w_bc"])
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bte,eh->bth", xs, p["w_dt"])
+                         .astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # [H] < 0
+    xh = xs.reshape(B, T, H, m.head_dim)
+    y, final = _ssd_chunked(xh, dt, B_, C_, A, m.chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, T, d_in) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_out"])
+    if return_state:
+        # decode resumes the conv with the last K-1 pre-conv inputs
+        pre = jnp.pad(xz[..., :d_in], ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+        conv_tail = pre[:, T:T + m.d_conv - 1]
+        return out, {"ssm": final, "conv": conv_tail}
+    return out
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.bfloat16) -> Params:
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    H = d_in // m.head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, m.head_dim, m.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, m.d_conv - 1, d_in), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, state: Params, cfg):
+    """One-token decode with O(1) state. x: [B,1,D]."""
+    m = cfg.mamba
+    B, _, D = x.shape
+    d_in = m.expand * D
+    H = d_in // m.head_dim
+    xz = jnp.einsum("btd,de->bte", x, p["w_in"])
+    xs, z = xz[:, 0, :d_in], xz[:, 0, d_in:]
+    # causal conv over [conv_tail ++ xs]
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32),
+                          p["w_conv"].astype(jnp.float32))
+    h = jax.nn.silu(conv_out).astype(x.dtype)
+    bc = jnp.einsum("be,en->bn", h, p["w_bc"])
+    B_, C_ = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("be,eh->bh", h, p["w_dt"])
+                         .astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = h.reshape(B, H, m.head_dim)
+    decay = jnp.exp(dt * A)  # [B,H]
+    upd = jnp.einsum("bh,bn,bhd->bhdn", dt, B_.astype(jnp.float32),
+                     xh.astype(jnp.float32))
+    ssm = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhdn->bhd", C_.astype(jnp.float32), ssm)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, d_in).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["w_out"])[:, None]
+    new_state = {"ssm": ssm, "conv": window[:, 1:].astype(state["conv"].dtype)}
+    return out, new_state

@@ -1,0 +1,412 @@
+"""Model assembly: every assigned architecture is a configuration of
+this module — homogeneous layer groups scanned with ``jax.lax.scan`` so
+compile time and HLO size are O(1) in depth, with per-family block
+structure (dense/MoE/hybrid/SSM/enc-dec/VLM) chosen by the config.
+
+Step functions exposed per model:
+* ``loss(params, batch)``            — train objective (+ MoE aux)
+* ``prefill(params, tokens)``        — forward + KV/state caches
+* ``decode_step(params, tok, caches, pos)`` — one token vs a seq_len cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, layer_kinds
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import mamba as mamba_mod
+from . import rwkv as rwkv_mod
+from .common import dense_init, norm, norm_params, softmax_xent, split_key
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------------
+# block init / apply
+# ----------------------------------------------------------------------
+def _init_block(key, cfg: ArchConfig, mixer: str, ffn: str) -> Params:
+    ks = split_key(key, "ln1", "mix", "ln2", "ffn", "cross", "ln3")
+    p: Params = {"ln1": norm_params(ks["ln1"], cfg.d_model, cfg.norm)}
+    if mixer == "attn":
+        p["attn"] = attn.init_attn(ks["mix"], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = mamba_mod.init_mamba(ks["mix"], cfg)
+    elif mixer == "rwkv":
+        p["rwkv"] = rwkv_mod.init_rwkv(ks["mix"], cfg)
+    elif mixer == "cross":  # whisper decoder: self + cross
+        p["attn"] = attn.init_attn(ks["mix"], cfg)
+        p["ln3"] = norm_params(ks["ln3"], cfg.d_model, cfg.norm)
+        p["cross"] = attn.init_cross_attn(ks["cross"], cfg)
+    if ffn != "channelmix":  # rwkv packs its FFN inside the block params
+        p["ln2"] = norm_params(ks["ln2"], cfg.d_model, cfg.norm)
+        if ffn == "moe":
+            p["moe"] = ffn_mod.init_moe(ks["ffn"], cfg)
+        elif ffn == "mlp":
+            p["ffn"] = ffn_mod.init_mlp(ks["ffn"], cfg.d_model, cfg.d_ff,
+                                        cfg.mlp)
+    else:
+        p["ln2"] = norm_params(ks["ln2"], cfg.d_model, cfg.norm)
+    return p
+
+
+def _apply_block(cfg: ArchConfig, mixer: str, ffn: str, p: Params,
+                 x: jnp.ndarray, *, enc: Optional[jnp.ndarray] = None,
+                 causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block (train/prefill/encoder). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(x, p["ln1"], cfg.norm, cfg.norm_eps)
+    if mixer == "attn":
+        x = x + attn.attn_forward(p["attn"], h, cfg, causal=causal)
+    elif mixer == "cross":
+        x = x + attn.attn_forward(p["attn"], h, cfg, causal=True)
+        h3 = norm(x, p["ln3"], cfg.norm, cfg.norm_eps)
+        x = x + attn.cross_attn_forward(p["cross"], h3, enc, cfg)
+    elif mixer == "mamba":
+        x = x + mamba_mod.mamba_forward(p["mamba"], h, cfg)
+    elif mixer == "rwkv":
+        x = x + rwkv_mod.rwkv_forward(p["rwkv"], h, cfg)
+        h2 = norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+        return x + rwkv_mod.channel_mix(p["rwkv"], h2), aux
+    h2 = norm(x, p["ln2"], cfg.norm, cfg.norm_eps)
+    if ffn == "moe":
+        y, aux = ffn_mod.moe_forward(p["moe"], h2, cfg)
+        x = x + y
+    else:
+        x = x + ffn_mod.mlp_forward(p["ffn"], h2, cfg.mlp)
+    return x, aux
+
+
+# ----------------------------------------------------------------------
+# layer grouping: (group_name, [(mixer, ffn), ...] pattern, repeat)
+# ----------------------------------------------------------------------
+def group_plan(cfg: ArchConfig) -> List[Tuple[str, List[Tuple[str, str]], int]]:
+    kinds = layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        block = cfg.attn_every  # one superblock = 8 sublayers (7 mamba + attn)
+        pattern = kinds[:block]
+        assert kinds == pattern * (cfg.n_layers // block)
+        return [("blocks", pattern, cfg.n_layers // block)]
+    if cfg.moe is not None and kinds[0][1] != kinds[-1][1]:
+        # deepseek-moe: dense layer 0, MoE elsewhere
+        return [("dense0", [kinds[0]], 1),
+                ("blocks", [kinds[-1]], cfg.n_layers - 1)]
+    if cfg.encdec is not None:
+        return [("blocks", [("cross", "mlp")], cfg.n_layers)]
+    return [("blocks", [kinds[0]], cfg.n_layers)]
+
+
+REMAT_POLICIES = {
+    "full": None,  # save only layer inputs; recompute everything in bwd
+    "dots": "dots_with_no_batch_dims_saveable",
+    "none": "everything_saveable",
+}
+
+
+class LM:
+    """Decoder LM (plus optional encoder / vision-projector frontends)."""
+
+    def __init__(self, cfg: ArchConfig, remat: str = "full"):
+        self.cfg = cfg
+        self.plan = group_plan(cfg)
+        self.remat = remat
+        self.cache_dtype = jnp.bfloat16  # kv_int8 variant overrides
+
+    def _maybe_remat(self, fn):
+        if self.remat == "none":
+            return fn
+        policy_name = REMAT_POLICIES.get(self.remat)
+        if policy_name is None:
+            return jax.checkpoint(fn)
+        return jax.checkpoint(
+            fn, policy=getattr(jax.checkpoint_policies, policy_name))
+
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        ks = split_key(key, "embed", "head", "norm", "enc", "proj",
+                       *[f"g_{g}" for g, _, _ in self.plan])
+        p: Params = {
+            "embed": dense_init(ks["embed"], (cfg.vocab, cfg.d_model),
+                                scale=0.02),
+            "final_norm": norm_params(ks["norm"], cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks["head"], (cfg.d_model, cfg.vocab))
+        for gname, pattern, repeat in self.plan:
+            gk = jax.random.split(ks[f"g_{gname}"], repeat)
+
+            def one(k):
+                sk = jax.random.split(k, len(pattern))
+                return {f"l{i}": _init_block(sk[i], cfg, m, f)
+                        for i, (m, f) in enumerate(pattern)}
+
+            stacked = jax.vmap(one)(gk) if repeat > 1 else one(gk[0])
+            p[gname] = stacked
+        if cfg.encdec is not None:
+            ek = jax.random.split(ks["enc"], cfg.encdec.n_enc_layers)
+
+            def enc_one(k):
+                return _init_block(k, cfg, "attn", "mlp")
+
+            p["encoder"] = jax.vmap(enc_one)(ek)
+            p["enc_norm"] = norm_params(ks["enc"], cfg.d_model, cfg.norm)
+        if cfg.vision is not None:
+            p["projector"] = dense_init(ks["proj"],
+                                        (cfg.vision.d_vit, cfg.d_model))
+        return p
+
+    def params_spec(self) -> Params:
+        key = jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init_params, key)
+
+    # ------------------------------------------------------------------
+    # forward over groups (scan over stacked layers)
+    # ------------------------------------------------------------------
+    def _run_groups(self, p: Params, x: jnp.ndarray,
+                    enc: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray,
+                                                         jnp.ndarray]:
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for gname, pattern, repeat in self.plan:
+            gp = p[gname]
+            if repeat == 1:
+                for i, (m, f) in enumerate(pattern):
+                    blk = self._maybe_remat(
+                        lambda lp, xc, _m=m, _f=f: _apply_block(
+                            cfg, _m, _f, lp, xc, enc=enc))
+                    x, aux = blk(gp[f"l{i}"], x)
+                    aux_total = aux_total + aux
+                continue
+
+            def body(carry, lp):
+                xc, auxc = carry
+                for i, (m, f) in enumerate(pattern):
+                    xc, aux = _apply_block(cfg, m, f, lp[f"l{i}"], xc, enc=enc)
+                    auxc = auxc + aux
+                return (xc, auxc), None
+
+            (x, aux_total), _ = jax.lax.scan(self._maybe_remat(body),
+                                             (x, aux_total), gp)
+        return x, aux_total
+
+    def _encode(self, p: Params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Whisper encoder over precomputed frame embeddings (conv stub)."""
+        cfg = self.cfg
+
+        def body(carry, lp):
+            xc, _ = _apply_block(cfg, "attn", "mlp", lp, carry, causal=False)
+            return xc, None
+
+        x, _ = jax.lax.scan(body, frames, p["encoder"])
+        return norm(x, p["enc_norm"], cfg.norm, cfg.norm_eps)
+
+    def _embed_inputs(self, p: Params, batch: Dict[str, jnp.ndarray]):
+        cfg = self.cfg
+        x = p["embed"][batch["tokens"]]
+        enc = None
+        if cfg.encdec is not None:
+            enc = self._encode(p, batch["frames"].astype(x.dtype))
+        if cfg.vision is not None:
+            vis = jnp.einsum("bpv,vd->bpd",
+                             batch["patches"].astype(x.dtype), p["projector"])
+            x = jnp.concatenate([vis, x], axis=1)
+        return x, enc
+
+    def forward(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        cfg = self.cfg
+        x, enc = self._embed_inputs(p, batch)
+        x, aux = self._run_groups(p, x, enc)
+        x = norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        logits = jnp.einsum("btd,dv->btv", x, head)
+        if cfg.vision is not None:  # only text positions produce logits
+            logits = logits[:, cfg.vision.n_patches:]
+        return logits, aux
+
+    def loss(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        logits, aux = self.forward(p, batch)
+        return softmax_xent(logits, batch["labels"]) + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # serving: prefill + one-token decode
+    # ------------------------------------------------------------------
+    def init_caches(self, batch: int, seq_len: int,
+                    dtype=None) -> Params:
+        dtype = dtype if dtype is not None else self.cache_dtype
+        cfg = self.cfg
+        caches: Params = {}
+        for gname, pattern, repeat in self.plan:
+            g: Params = {}
+            for i, (m, f) in enumerate(pattern):
+                if m in ("attn", "cross"):
+                    shape = (batch, seq_len, cfg.n_kv_heads, cfg.head_dim)
+                    c = {"k": jnp.zeros(shape, dtype),
+                         "v": jnp.zeros(shape, dtype)}
+                elif m == "mamba":
+                    c = mamba_mod.init_mamba_state(cfg, batch, dtype)
+                elif m == "rwkv":
+                    c = rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+                else:
+                    continue
+                if repeat > 1:
+                    c = jax.tree.map(
+                        lambda a: jnp.broadcast_to(a, (repeat,) + a.shape), c)
+                g[f"l{i}"] = c
+            caches[gname] = g
+        return caches
+
+    def cache_spec(self, batch: int, seq_len: int) -> Params:
+        return jax.eval_shape(lambda: self.init_caches(batch, seq_len))
+
+    def decode_step(self, p: Params, token: jnp.ndarray, caches: Params,
+                    pos: jnp.ndarray, *,
+                    enc: Optional[jnp.ndarray] = None) -> Tuple[jnp.ndarray,
+                                                                Params]:
+        """token: [B] int32; pos: [B] absolute positions; caches as from
+        ``init_caches``.  Returns (logits [B,V], new caches)."""
+        cfg = self.cfg
+        x = p["embed"][token][:, None]  # [B,1,D]
+        new_caches: Params = {}
+        for gname, pattern, repeat in self.plan:
+            gp, gc = p[gname], caches[gname]
+            if repeat == 1:
+                ng: Params = {}
+                for i, (m, f) in enumerate(pattern):
+                    x, c = self._decode_block(gp[f"l{i}"], x, m, f,
+                                              gc.get(f"l{i}"), pos, enc)
+                    if c is not None:
+                        ng[f"l{i}"] = c
+                new_caches[gname] = ng
+                continue
+
+            def body(x_carry, scanned):
+                lp, lc = scanned
+                nc: Params = {}
+                xc = x_carry
+                for i, (m, f) in enumerate(pattern):
+                    xc, c = self._decode_block(lp[f"l{i}"], xc, m, f,
+                                               lc.get(f"l{i}"), pos, enc)
+                    if c is not None:
+                        nc[f"l{i}"] = c
+                return xc, nc
+
+            x, new_gc = jax.lax.scan(body, x, (gp, gc))
+            new_caches[gname] = new_gc
+        x = norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        logits = jnp.einsum("btd,dv->btv", x, head)[:, 0]
+        return logits, new_caches
+
+    def _decode_block(self, bp: Params, x, mixer: str, ffn: str, cache,
+                      pos, enc):
+        cfg = self.cfg
+        h = norm(x, bp["ln1"], cfg.norm, cfg.norm_eps)
+        new_cache = None
+        if mixer in ("attn", "cross"):
+            y, new_cache = attn.attn_decode(bp["attn"], h, cache, cfg, pos=pos)
+            x = x + y
+            if mixer == "cross":
+                h3 = norm(x, bp["ln3"], cfg.norm, cfg.norm_eps)
+                x = x + attn.cross_attn_forward(bp["cross"], h3, enc, cfg)
+        elif mixer == "mamba":
+            y, new_cache = mamba_mod.mamba_decode(bp["mamba"], h, cache, cfg)
+            x = x + y
+        elif mixer == "rwkv":
+            y, tm_state = rwkv_mod.rwkv_decode(bp["rwkv"], h, cache, cfg)
+            x = x + y
+            h2 = norm(x, bp["ln2"], cfg.norm, cfg.norm_eps)
+            y2, cm_shift = rwkv_mod.channel_mix_decode(bp["rwkv"], h2,
+                                                       cache["shift_cm"])
+            x = x + y2
+            new_cache = {**tm_state, "shift_cm": cm_shift}
+            return x, new_cache
+        h2 = norm(x, bp["ln2"], cfg.norm, cfg.norm_eps)
+        if ffn == "moe":
+            y, _ = ffn_mod.moe_forward(bp["moe"], h2, cfg)
+            x = x + y
+        else:
+            x = x + ffn_mod.mlp_forward(bp["ffn"], h2, cfg.mlp)
+        return x, new_cache
+
+    def prefill(self, p: Params, batch: Dict[str, jnp.ndarray],
+                seq_len: int) -> Tuple[jnp.ndarray, Params]:
+        """Run the full prompt, returning last-position logits + caches.
+        (Reference implementation: re-runs blocks capturing caches; the
+        serving path in repro.serving uses the paged variant.)"""
+        cfg = self.cfg
+        x, enc = self._embed_inputs(p, batch)
+        caches: Params = {}
+        aux = jnp.zeros((), jnp.float32)
+        for gname, pattern, repeat in self.plan:
+            gp = p[gname]
+            if repeat == 1:
+                g: Params = {}
+                for i, (m, f) in enumerate(pattern):
+                    x, c, aux = self._prefill_block(gp[f"l{i}"], x, m, f,
+                                                    enc, aux)
+                    if c is not None:
+                        g[f"l{i}"] = c
+                caches[gname] = g
+                continue
+
+            def body(carry, lp):
+                xc, auxc = carry
+                cs: Params = {}
+                for i, (m, f) in enumerate(pattern):
+                    xc, c, auxc = self._prefill_block(lp[f"l{i}"], xc, m, f,
+                                                      enc, auxc)
+                    if c is not None:
+                        cs[f"l{i}"] = c
+                return (xc, auxc), cs
+
+            (x, aux), gc = jax.lax.scan(body, (x, aux), gp)
+            caches[gname] = gc
+        x = norm(x, p["final_norm"], cfg.norm, cfg.norm_eps)
+        head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+        logits = jnp.einsum("bd,dv->bv", x[:, -1], head)
+        return logits, caches
+
+    def _prefill_block(self, bp, x, mixer, ffn, enc, aux):
+        cfg = self.cfg
+        h = norm(x, bp["ln1"], cfg.norm, cfg.norm_eps)
+        cache = None
+        if mixer in ("attn", "cross"):
+            y, cache = attn.attn_prefill(bp["attn"], h, cfg)
+            cache = {k: v.astype(x.dtype) for k, v in cache.items()}
+            x = x + y
+            if mixer == "cross":
+                h3 = norm(x, bp["ln3"], cfg.norm, cfg.norm_eps)
+                x = x + attn.cross_attn_forward(bp["cross"], h3, enc, cfg)
+        elif mixer == "mamba":
+            y, cache = mamba_mod.mamba_forward(bp["mamba"], h, cfg,
+                                               return_state=True)
+            x = x + y
+        elif mixer == "rwkv":
+            y, tm = rwkv_mod.rwkv_forward(bp["rwkv"], h, cfg,
+                                          return_state=True)
+            x = x + y
+            h2 = norm(x, bp["ln2"], cfg.norm, cfg.norm_eps)
+            x = x + rwkv_mod.channel_mix(bp["rwkv"], h2)
+            cache = {"wkv": tm["wkv"],
+                     "shift_tm": tm["shift"].astype(x.dtype),
+                     "shift_cm": h2[:, -1].astype(x.dtype)}
+            return x, cache, aux
+        h2 = norm(x, bp["ln2"], cfg.norm, cfg.norm_eps)
+        if ffn == "moe":
+            y, a = ffn_mod.moe_forward(bp["moe"], h2, cfg)
+            x = x + y
+            aux = aux + a
+        else:
+            x = x + ffn_mod.mlp_forward(bp["ffn"], h2, cfg.mlp)
+        return x, cache, aux
+
+
+def build_model(cfg: ArchConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,4 @@
+from . import adamw, schedules
+from .adamw import AdamWState
+
+__all__ = ["adamw", "schedules", "AdamWState"]

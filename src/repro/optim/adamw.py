@@ -1,0 +1,69 @@
+"""AdamW with fp32 master weights/moments (bf16 params), gradient
+clipping and microbatch accumulation — ZeRO-3 sharding of the state is
+applied by the launcher via ``distributed.sharding.zero_specs``."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Params
+    v: Params
+    master: Params  # fp32 copy of the (possibly bf16) params
+
+
+def init(params: Params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+    )
+
+
+def init_spec(params_spec: Params) -> AdamWState:
+    return jax.eval_shape(init, params_spec)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(grads: Params, state: AdamWState, params: Params, *,
+           lr: jnp.ndarray, b1: float = 0.9, b2: float = 0.95,
+           eps: float = 1e-8, weight_decay: float = 0.1,
+           clip_norm: Optional[float] = 1.0) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    if clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        w = w - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    return new_params, AdamWState(step=step, m=m, v=v, master=master)

@@ -1,0 +1,35 @@
+"""LR schedules.  WSD (warmup–stable–decay) is MiniCPM's schedule
+(arXiv:2404.06395 §4) — assigned arch minicpm-2b trains with it."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(step, *, peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """MiniCPM warmup-stable-decay: linear warmup, flat stable phase,
+    exponential-ish (here cosine-shaped) decay to final_frac·peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    in_decay = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1),
+                        0.0, 1.0)
+    decay_mult = final_frac + (1 - final_frac) * 0.5 * \
+        (1 + jnp.cos(jnp.pi * in_decay))
+    return jnp.where(step < warmup, warm, peak_lr * decay_mult)
+
+
+def cosine(step, *, peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    mult = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, peak_lr * mult)
+
+
+def for_arch(arch_name: str, step, peak_lr: float = 3e-4, total: int = 10000):
+    if arch_name.startswith("minicpm"):
+        return wsd(step, peak_lr=peak_lr, warmup=total // 100,
+                   stable=int(total * 0.9), decay=total // 10)
+    return cosine(step, peak_lr=peak_lr, warmup=total // 100, total=total)

@@ -1,0 +1,237 @@
+"""Serving engine: continuous batching over a paged KV cache whose
+metadata plane is built from RECIPE-converted indexes.
+
+* **Block table** — P-CLHT mapping (seq_id, logical_page) → physical
+  page.  Every page grant is a Condition-#1 commit (value-then-key,
+  flush+fence), so a crashed server restarts with a consistent page
+  map: decoding sequences lose nothing that was acknowledged.
+* **Prefix cache** — P-ART keyed by a rolling hash of token blocks
+  (ordered index: longest-prefix matching walks the radix structure),
+  mapping prefix-hash → page id, enabling cross-request KV reuse that
+  SURVIVES RESTART — the RECIPE selling point applied to inference
+  economics: a rebooted node skips re-prefilling warm prefixes.
+* **Allocator** — free list persisted as a bitmap region; allocation
+  commit = single atomic word store (bit set), GC reconciles leaks.
+
+The compute plane (decode attention over the pages) is
+kernels/paged_attention; this module is the control plane and a
+CPU-scale reference server driving reduced-config models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import PART, PCLHT, PMem
+
+_M64 = (1 << 64) - 1
+
+
+def _roll_hash(prev: int, block_tokens) -> int:
+    h = prev or 1469598103934665603
+    for t in block_tokens:
+        h = ((h ^ int(t)) * 1099511628211) & _M64
+    return (h & ((1 << 62) - 1)) | 1  # PM words are signed 64-bit
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    done: bool = False
+
+
+class PagedKVManager:
+    """Crash-consistent page metadata over a fixed page pool."""
+
+    def __init__(self, pmem: PMem, n_pages: int, page_size: int):
+        self.pmem = pmem
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.table = PCLHT(pmem, n_buckets=max(64, n_pages // 2),
+                           name="kv.table")
+        self.prefix = PART(pmem, name="kv.prefix")
+        existing = pmem.find("kv.bitmap")
+        self.bitmap = existing or pmem.alloc("kv.bitmap", n_pages)
+        if existing is None:
+            pmem.persist_region(self.bitmap)
+
+    # -- allocator ------------------------------------------------------
+    def alloc_page(self) -> Optional[int]:
+        for p in range(self.n_pages):
+            if self.pmem.load(self.bitmap, p) == 0:
+                self.pmem.store(self.bitmap, p, 1)  # atomic commit
+                self.pmem.persist(self.bitmap, p)
+                return p
+        return None
+
+    def free_page(self, p: int) -> None:
+        self.pmem.store(self.bitmap, p, 0)
+        self.pmem.persist(self.bitmap, p)
+
+    # -- block table ------------------------------------------------------
+    @staticmethod
+    def _bt_key(seq_id: int, logical: int) -> int:
+        return ((seq_id << 20) | logical) + (1 << 60)
+
+    def map_page(self, seq_id: int, logical: int, physical: int) -> None:
+        self.table.insert(self._bt_key(seq_id, logical), physical + 1)
+
+    def lookup_page(self, seq_id: int, logical: int) -> Optional[int]:
+        v = self.table.lookup(self._bt_key(seq_id, logical))
+        return None if v is None else v - 1
+
+    def release_seq(self, seq_id: int, n_logical: int) -> None:
+        for l in range(n_logical):
+            p = self.lookup_page(seq_id, l)
+            if p is not None:
+                self.table.delete(self._bt_key(seq_id, l))
+                self.free_page(p)
+
+    # -- prefix cache -----------------------------------------------------
+    def prefix_lookup(self, tokens: List[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix: returns (n_tokens_covered, page_ids)."""
+        h, pages, covered = 0, [], 0
+        ps = self.page_size
+        for b in range(len(tokens) // ps):
+            h = _roll_hash(h, tokens[b * ps:(b + 1) * ps])
+            page = self.prefix.lookup(h)
+            if page is None:
+                break
+            pages.append(page - 1)
+            covered += ps
+        return covered, pages
+
+    def prefix_insert(self, tokens: List[int], pages: List[int]) -> None:
+        h = 0
+        ps = self.page_size
+        for b, page in enumerate(pages):
+            blk = tokens[b * ps:(b + 1) * ps]
+            if len(blk) < ps:
+                break
+            h = _roll_hash(h, blk)
+            self.prefix.insert(h, page + 1)
+
+    def recover(self) -> None:
+        """Post-crash: locks were reinitialized by PMem.crash; the
+        indexes need no repair (RECIPE).  Reconcile the bitmap against
+        the block table + prefix cache (leaked pages = crash garbage)."""
+        live = set()
+        for k, v in self.table.items():
+            live.add(v - 1)
+        for k, v in self.prefix.items():
+            live.add(v - 1)
+        for p in range(self.n_pages):
+            if self.pmem.load(self.bitmap, p) == 1 and p not in live:
+                self.free_page(p)
+
+
+class Server:
+    """Reference continuous-batching server (reduced configs, CPU)."""
+
+    def __init__(self, model, params, *, max_batch: int = 8,
+                 page_size: int = 16, n_pages: int = 512,
+                 pmem: Optional[PMem] = None):
+        self.model = model
+        self.params = params
+        self.cfg = model.cfg
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.pmem = pmem or PMem()
+        self.kv = PagedKVManager(self.pmem, n_pages, page_size)
+        self.queue: List[Request] = []
+        self.running: List[Request] = []
+        self.caches: Dict[int, Any] = {}  # rid -> dense cache (compute)
+        self._next_rid = 0
+        self.stats = {"prefill_tokens": 0, "prefix_hits": 0,
+                      "decode_steps": 0}
+
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, list(prompt), max_new))
+        return rid
+
+    def _prefill(self, req: Request, max_len: int) -> None:
+        covered, pages = self.kv.prefix_lookup(req.prompt)
+        self.stats["prefix_hits"] += covered
+        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32),
+                 "labels": jnp.zeros((1, len(req.prompt)), jnp.int32)}
+        logits, caches = self.model.prefill(self.params, batch,
+                                            len(req.prompt))
+        self.stats["prefill_tokens"] += len(req.prompt) - covered
+        # grant pages for the prompt + commit to the block table
+        n_logical = -(-len(req.prompt) // self.page_size)
+        granted = []
+        for l in range(n_logical):
+            p = self.kv.lookup_page(req.rid, l)
+            if p is None:
+                p = self.kv.alloc_page()
+                if p is None:
+                    raise MemoryError("KV page pool exhausted")
+                self.kv.map_page(req.rid, l, p)
+            granted.append(p)
+        self.kv.prefix_insert(req.prompt, granted)
+        # pad dense compute cache to max_len
+        def pad(c):
+            if c.ndim >= 3 and c.shape[-3] == len(req.prompt):
+                widths = [(0, 0)] * c.ndim
+                widths[-3] = (0, max_len - len(req.prompt))
+                return jnp.pad(c, widths)
+            return c
+        self.caches[req.rid] = jax.tree.map(pad, caches)
+        req.pos = len(req.prompt)
+        tok = int(jnp.argmax(logits[0]))
+        req.out.append(tok)
+
+    def step(self, max_len: int = 128) -> None:
+        """One scheduler tick: admit + decode one token for all running."""
+        while self.queue and len(self.running) < self.max_batch:
+            req = self.queue.pop(0)
+            self._prefill(req, max_len)
+            self.running.append(req)
+        finished = []
+        for req in self.running:
+            tok = jnp.asarray([req.out[-1]], jnp.int32)
+            pos = jnp.asarray([req.pos], jnp.int32)
+            logits, self.caches[req.rid] = self.model.decode_step(
+                self.params, tok, self.caches[req.rid], pos)
+            self.stats["decode_steps"] += 1
+            req.pos += 1
+            nxt = int(jnp.argmax(logits[0]))
+            req.out.append(nxt)
+            if len(req.out) >= req.max_new or req.pos >= max_len - 1:
+                req.done = True
+                finished.append(req)
+        for req in finished:
+            self.running.remove(req)
+            del self.caches[req.rid]
+
+    def run_until_drained(self, max_len: int = 128,
+                          max_ticks: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        ticks = 0
+        while (self.queue or self.running) and ticks < max_ticks:
+            before = {r.rid for r in self.running}
+            self.step(max_len)
+            ticks += 1
+            done.extend(r for r in self.running if r.done)
+        return done
+
+    def crash_and_recover(self) -> None:
+        """Power-fail the metadata plane; RECIPE indexes come back with
+        no repair pass, the bitmap is reconciled, compute caches (HBM)
+        are gone — but the block/prefix metadata for committed pages
+        survives, so warm prefixes skip re-prefill."""
+        self.pmem.crash(mode="powerfail")
+        self.kv.recover()
+        self.caches.clear()
+        self.running.clear()

@@ -1,0 +1,168 @@
+"""Hand-crafted baseline indexes: correctness in fixed mode, and
+re-finding the paper's reported bugs (§3, §7.5) in buggy mode."""
+
+import numpy as np
+import pytest
+
+from repro.core import PMem, CrashPoint, audit_durability, run_crash_sweep
+from repro.core.baselines import CCEH, FastFair, LevelHashing, StallError
+
+
+def keys_for(seed, n):
+    rng = np.random.default_rng(seed)
+    return [int(k) for k in np.unique(rng.integers(1, 1 << 60, size=n))]
+
+
+# ----------------------------------------------------------------------
+# fixed-mode correctness
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("factory", [
+    lambda p: FastFair(p, fixed=True),
+    lambda p: CCEH(p, fixed=True),
+    LevelHashing,
+], ids=["fastfair", "cceh", "level"])
+def test_fixed_mode_correct(factory):
+    pmem = PMem()
+    idx = factory(pmem)
+    keys = keys_for(0, 400)
+    for k in keys:
+        assert idx.insert(k, k + 5)
+    for k in keys:
+        assert idx.lookup(k) == k + 5
+    idx.check_invariants()
+
+
+def test_fastfair_range_and_order():
+    pmem = PMem()
+    ff = FastFair(pmem)
+    for k in range(5, 500, 3):
+        ff.insert(k, k * 2)
+    assert list(ff.keys()) == list(range(5, 500, 3))
+    got = ff.range_query(50, 120)
+    assert got == [(k, k * 2) for k in range(5, 500, 3) if 50 <= k <= 120]
+
+
+@pytest.mark.parametrize("factory", [
+    lambda p: FastFair(p, fixed=True),
+    lambda p: CCEH(p, fixed=True),
+], ids=["fastfair", "cceh"])
+def test_fixed_mode_crash_sweep(factory):
+    keys = keys_for(1, 50)
+    ops = [("insert", k, k + 1) for k in keys]
+    report = run_crash_sweep(factory, ops, mode="powerfail", post_writes=4,
+                             max_states=2500)
+    assert report.ok, report.summary()
+
+
+# ----------------------------------------------------------------------
+# re-finding the paper's bugs
+# ----------------------------------------------------------------------
+def test_fastfair_split_persist_bug_loses_right_node():
+    """§7.5: crash during a split (sibling linked before being flushed)
+    makes the right node's keys unreachable — data loss."""
+    keys = sorted(keys_for(2, 40))  # sorted fill forces splits
+    ops = [("insert", k, k + 1) for k in keys]
+    report = run_crash_sweep(lambda p: FastFair(p, fixed=False), ops,
+                             mode="powerfail", post_writes=2, max_states=2500)
+    assert not report.ok, "buggy FAST&FAIR should lose keys under crash"
+    assert report.consistency_failures, report.summary()
+
+
+def test_fastfair_durability_bug_root_not_persisted():
+    """§7.5: 'the initial node allocation containing the root pointer is
+    not persisted in FAST & FAIR' — caught by the durability audit."""
+    pmem = PMem()
+    FastFair(pmem, fixed=False)
+    assert pmem.unpersisted_lines(), "buggy root allocation must be dirty"
+    pmem2 = PMem()
+    FastFair(pmem2, fixed=True)
+    assert not pmem2.unpersisted_lines()
+
+
+def test_fastfair_lost_key_concurrency_bug():
+    """§3 design bug: a writer that slept through a split inserts into
+    the wrong node; the key is never readable again."""
+    pmem = PMem()
+    ff = FastFair(pmem, fixed=False)
+    from repro.core.baselines.fastfair import CAP, INF
+    # fill one leaf to the brink
+    base = 1000
+    for i in range(CAP):
+        ff.insert(base + i, i + 1)
+    # thread A descends (snapshot of the path), then thread B splits,
+    # then A inserts a key that now belongs right of the separator
+    path_a = ff._descend(base + CAP + 5)
+    leaf_a = path_a[-1]
+    ff.insert(base + CAP, 99)  # triggers the split
+    # A proceeds with its stale leaf and the buggy no-recheck insert:
+    a = ff.arena
+    a.lock(leaf_a)
+    try:
+        if ff._count(leaf_a) < CAP:
+            ff._shift_insert(leaf_a, base + CAP + 5, 777, kbase=8, vbase=8 + CAP)
+    finally:
+        a.unlock(leaf_a)
+    # the key was acknowledged but is unreachable (it sits left of the
+    # separator, where no reader will look for it)
+    assert ff.lookup(base + CAP + 5) is None, \
+        "lost-key bug should make the insert invisible"
+
+
+def test_cceh_directory_doubling_bug_stalls():
+    """§3: crash between the directory-pointer store and the depth store
+    leaves CCEH permanently looping (we surface it as StallError)."""
+    pmem = PMem()
+    c = CCEH(pmem, depth=1, fixed=False)
+    # fill until just before a doubling, then arm a crash inside it
+    rng = np.random.default_rng(3)
+    stalled = False
+    inserted = []
+    for k in keys_for(3, 4000):
+        try:
+            # crash 1 store after the new-directory pointer lands
+            before = pmem.counters.stores
+            c.insert(k, k + 1)
+            inserted.append(k)
+        except StallError:
+            stalled = True
+            break
+        except CrashPoint:
+            pmem.crash(mode="powerfail")
+            c.recover()
+            # post-crash: any op that touches the directory stalls
+            try:
+                for kk in inserted[:8]:
+                    c.lookup(kk)
+                c.insert(12345, 1)
+            except StallError:
+                stalled = True
+            break
+        # arm the crash only once a doubling is imminent: detect via the
+        # directory object's depth vs segment fill is internal, so we just
+        # arm a store-count crash window around every 64th insert
+        if len(inserted) % 64 == 0:
+            pmem.arm_crash(after_stores=200 + int(rng.integers(0, 200)))
+    pmem.disarm_crash()
+    assert stalled or len(inserted) < 4000
+
+
+def test_cceh_fixed_mode_survives_doubling_crashes():
+    keys = keys_for(4, 60)
+    ops = [("insert", k, k + 1) for k in keys]
+    report = run_crash_sweep(lambda p: CCEH(p, depth=1, fixed=True), ops,
+                             mode="powerfail", post_writes=4, max_states=2500)
+    assert report.ok, report.summary()
+
+
+# ----------------------------------------------------------------------
+# durability audits for fixed modes
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("factory", [
+    lambda p: FastFair(p, fixed=True),
+    lambda p: CCEH(p, fixed=True),
+    LevelHashing,
+], ids=["fastfair", "cceh", "level"])
+def test_fixed_durability(factory):
+    keys = keys_for(5, 120)
+    ops = [("insert", k, k + 1) for k in keys]
+    assert audit_durability(factory, ops) == []

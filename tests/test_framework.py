@@ -1,0 +1,205 @@
+"""Framework-layer tests: checkpoint store, data pipeline, serving
+engine, elasticity — the RECIPE technique living in the substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PMem, CrashPoint
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.elastic import (FleetMonitor, accumulation_for,
+                                  elastic_mesh_plan)
+
+
+def small_tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w1": jax.random.normal(k, (32, 16), jnp.float32),
+        "nested": {"b": jnp.arange(7, dtype=jnp.int32),
+                   "bf": jnp.ones((8, 8), jnp.bfloat16) * 1.5},
+    }
+
+
+# ----------------------------------------------------------------------
+# checkpoint store
+# ----------------------------------------------------------------------
+def test_checkpoint_roundtrip():
+    store = CheckpointStore()
+    tree = small_tree()
+    store.save(10, tree)
+    got = store.restore(tree, step=10)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def test_checkpoint_latest_generation_wins():
+    store = CheckpointStore()
+    t1, t2 = small_tree(1), small_tree(2)
+    store.save(1, t1)
+    store.save(2, t2)
+    assert store.latest_step() == 2
+    got = store.restore(t2)
+    assert jnp.allclose(got["w1"], t2["w1"])
+    old = store.restore(t1, step=1)
+    assert jnp.allclose(old["w1"], t1["w1"])
+
+
+def test_checkpoint_crash_mid_save_preserves_previous_generation():
+    """RECIPE Condition #1: a crash at ANY point during save leaves the
+    previous generation restorable — sweep crash points through save."""
+    t1, t2 = small_tree(1), small_tree(2)
+    # count the crash points in a full save to enumerate them
+    pmem = PMem()
+    store = CheckpointStore(pmem)
+    store.save(1, t1)
+    n0 = pmem.crash_calls
+    store.save(2, t2)
+    n_points = pmem.crash_calls - n0
+    for frac in (0.01, 0.1, 0.3, 0.6, 0.9, 0.99):
+        pmem = PMem()
+        store = CheckpointStore(pmem)
+        store.save(1, t1)
+        pmem.arm_crash(after_stores=max(1, int(n_points * frac)))
+        try:
+            store.save(2, t2)
+            pmem.disarm_crash()
+        except CrashPoint:
+            pass
+        pmem.crash(mode="powerfail")
+        assert store.latest_step() == 1, frac
+        got = store.restore(t1, step=1)
+        assert jnp.allclose(got["w1"], t1["w1"]), frac
+
+
+def test_checkpoint_async_save():
+    store = CheckpointStore()
+    tree = small_tree()
+    t = store.save_async(5, tree)
+    t.join()
+    got = store.restore(tree)
+    assert jnp.allclose(got["w1"], tree["w1"])
+
+
+# ----------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, n_docs=64,
+                     mean_doc_len=64)
+    p1 = TokenPipeline(cfg)
+    seen = []
+    for _ in range(5):
+        seen.append(p1.next_batch()["tokens"].copy())
+        p1.commit()
+    # a fresh pipeline on the same PM resumes at step 5
+    p2 = TokenPipeline(cfg, pmem=p1.pmem)
+    assert p2.cursor == p1.cursor
+    b5 = p2.next_batch()["tokens"]
+    # a pipeline on fresh PM replays identically from 0
+    p3 = TokenPipeline(cfg)
+    for i in range(5):
+        assert np.array_equal(p3.next_batch()["tokens"], seen[i]), i
+        p3.commit()
+    assert np.array_equal(p3.next_batch()["tokens"], b5)
+
+
+def test_pipeline_crash_between_commits():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=4, n_docs=64,
+                     mean_doc_len=64)
+    p = TokenPipeline(cfg)
+    for _ in range(3):
+        p.next_batch()
+        p.commit()
+    p.pmem.crash(mode="powerfail")
+    p.recover()
+    assert p.cursor[1] == 3  # committed cursor survives exactly
+
+
+def test_pipeline_rank_stripes_disjoint():
+    cfg = DataConfig(vocab=100, seq_len=16, global_batch=8, n_docs=64,
+                     mean_doc_len=64)
+    pa = TokenPipeline(cfg, rank=0, world=2)
+    pb = TokenPipeline(cfg, rank=1, world=2)
+    a = pa.next_batch()["tokens"]
+    b = pb.next_batch()["tokens"]
+    assert a.shape[0] == b.shape[0] == 4
+    assert not np.array_equal(a, b)
+
+
+# ----------------------------------------------------------------------
+# serving engine
+# ----------------------------------------------------------------------
+def test_server_batched_requests_and_prefix_reuse():
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+    from repro.serving.engine import Server
+    cfg = get_arch("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    server = Server(model, params, page_size=8, n_pages=128)
+    rng = np.random.default_rng(0)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+    for _ in range(3):
+        tail = [int(t) for t in rng.integers(1, cfg.vocab, 8)]
+        server.submit(prefix + tail, max_new=4)
+    server.run_until_drained(max_len=48)
+    assert server.stats["decode_steps"] > 0
+    assert server.stats["prefix_hits"] > 0  # requests 2,3 reuse request 1
+
+
+def test_server_crash_recovery_keeps_prefix_cache():
+    from repro.configs import get_arch
+    from repro.models.model import build_model
+    from repro.serving.engine import Server
+    cfg = get_arch("qwen2-0.5b").reduced()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    server = Server(model, params, page_size=8, n_pages=128)
+    rng = np.random.default_rng(1)
+    prefix = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+    server.submit(prefix + [5, 6, 7, 8], max_new=4)
+    server.run_until_drained(max_len=48)
+    covered_before, _ = server.kv.prefix_lookup(prefix + [5, 6, 7, 8])
+    assert covered_before >= 16
+    server.crash_and_recover()
+    covered_after, _ = server.kv.prefix_lookup(prefix + [5, 6, 7, 8])
+    assert covered_after == covered_before, \
+        "prefix cache must survive the crash (RECIPE)"
+
+
+# ----------------------------------------------------------------------
+# elasticity
+# ----------------------------------------------------------------------
+def test_fleet_monitor_detects_dead_and_stragglers():
+    m = FleetMonitor(4, timeout_steps=2, straggler_factor=2.0,
+                     straggler_patience=2)
+    for step in range(6):
+        for w in range(4):
+            if w == 3 and step >= 2:
+                continue  # worker 3 dies at step 2
+            t = 1.0 if w != 2 else 3.5  # worker 2 is slow
+            m.heartbeat(w, step, t)
+        dead, strag = m.sweep()
+    assert 3 in dead
+    assert 2 in strag
+
+
+def test_elastic_mesh_plan():
+    assert elastic_mesh_plan(256, 16) == (16, 16)
+    assert elastic_mesh_plan(240, 16) == (15, 16)
+    assert elastic_mesh_plan(15, 16) is None
+    assert accumulation_for(256, 15, 1) == 18
+
+
+def test_train_with_injected_crash_restart():
+    from repro.launch.train import train
+    out = train("qwen2-0.5b", steps=12, batch=4, seq_len=32, ckpt_every=4,
+                kill_at_step=6, verbose=False)
+    assert out["final_step"] == 12
+    # restart resumed from the last committed generation (step 4) and the
+    # data cursor matches the committed step count
+    assert out["data"].global_step == 12
+    assert np.isfinite(out["losses"]).all()

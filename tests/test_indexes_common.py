@@ -1,0 +1,115 @@
+"""One battery over all five converted indexes (paper Tables 1 & 2):
+correctness, ordering, durability audit, and the §5 crash sweep."""
+
+import numpy as np
+import pytest
+
+from repro.core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem,
+                        audit_durability, run_crash_sweep)
+
+FACTORIES = {
+    "P-CLHT": lambda p: PCLHT(p, n_buckets=8),
+    "P-HOT": PHOT,
+    "P-BwTree": PBwTree,
+    "P-ART": PART,
+    "P-Masstree": PMasstree,
+}
+ORDERED = ["P-HOT", "P-BwTree", "P-ART", "P-Masstree"]
+
+
+def keys_for(seed: int, n: int):
+    rng = np.random.default_rng(seed)
+    return [int(k) for k in np.unique(rng.integers(1, 1 << 60, size=n))]
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_insert_lookup(name):
+    pmem = PMem()
+    idx = FACTORIES[name](pmem)
+    keys = keys_for(0, 300)
+    for k in keys:
+        assert idx.insert(k, k ^ 0x1234), (name, k)
+    for k in keys:
+        assert idx.lookup(k) == k ^ 0x1234, (name, k)
+    assert idx.lookup(999) is None
+    idx.check_invariants()
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_insert_existing_fails(name):
+    pmem = PMem()
+    idx = FACTORIES[name](pmem)
+    assert idx.insert(77, 1)
+    assert not idx.insert(77, 2)
+    assert idx.lookup(77) == 1
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_delete(name):
+    pmem = PMem()
+    idx = FACTORIES[name](pmem)
+    keys = keys_for(1, 120)
+    for k in keys:
+        idx.insert(k, k + 1)
+    for k in keys[:60]:
+        assert idx.delete(k), (name, k)
+        assert idx.lookup(k) is None
+    for k in keys[60:]:
+        assert idx.lookup(k) == k + 1
+    idx.check_invariants()
+
+
+@pytest.mark.parametrize("name", ORDERED)
+def test_range_query(name):
+    pmem = PMem()
+    idx = FACTORIES[name](pmem)
+    for k in range(10, 400, 7):
+        idx.insert(k, k * 2)
+    got = idx.range_query(50, 200)
+    expect = [(k, k * 2) for k in range(10, 400, 7) if 50 <= k <= 200]
+    assert got == expect, name
+
+
+@pytest.mark.parametrize("name", ORDERED)
+def test_sorted_iteration(name):
+    pmem = PMem()
+    idx = FACTORIES[name](pmem)
+    keys = keys_for(2, 250)
+    for k in keys:
+        idx.insert(k, k)
+    assert list(idx.keys()) == sorted(keys), name
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_durability_audit(name):
+    """The PIN durability test: every dirtied line flushed after each op."""
+    keys = keys_for(3, 150)
+    ops = [("insert", k, k + 9) for k in keys]
+    ops += [("delete", k, 0) for k in keys[:40]]
+    ops += [("lookup", k, 0) for k in keys[40:80]]
+    assert audit_durability(FACTORIES[name], ops) == [], name
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_crash_sweep(name):
+    """§5 targeted crash states over a split/SMO-heavy workload."""
+    keys = keys_for(4, 40)
+    # sequential keys force tree/leaf splits; random ones exercise hashing
+    keys += list(range(0x0F00000000000000, 0x0F00000000000000 + 30))
+    ops = [("insert", k, k ^ 0xAB) for k in dict.fromkeys(keys)]
+    ops += [("delete", k, 0) for k in keys[:8]]
+    report = run_crash_sweep(FACTORIES[name], ops, mode="powerfail",
+                             post_writes=6, max_states=4000)
+    assert report.ok, report.summary()
+    assert report.n_crash_states > 50, report.summary()
+
+
+@pytest.mark.parametrize("name", list(FACTORIES))
+def test_crash_sweep_interrupt_mode(name):
+    """The paper's §5 consistency test proper: interrupted ops with the
+    partial state retained (DRAM-emulated crash), then reads+writes."""
+    keys = keys_for(5, 30)
+    ops = [("insert", k, k + 3) for k in keys]
+    report = run_crash_sweep(FACTORIES[name], ops, mode="interrupt",
+                             post_writes=4, max_states=1500)
+    assert report.ok, report.summary()

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PART, PCLHT, PHOT, PMasstree, PMem, CrashPoint
+from repro.core.masstree import perm_pack, perm_slots
+from repro.core.art import pack_hdr, unpack_hdr
+
+KEYS = st.integers(min_value=1, max_value=(1 << 62) - 1)
+
+
+@st.composite
+def op_sequences(draw):
+    n = draw(st.integers(2, 40))
+    keys = draw(st.lists(KEYS, min_size=n, max_size=n, unique=True))
+    ops = []
+    live = []
+    for k in keys:
+        ops.append(("insert", k, (k % 1000003) + 1))
+        live.append(k)
+        if live and draw(st.booleans()):
+            victim = live[draw(st.integers(0, len(live) - 1))]
+            ops.append(("delete", victim, 0))
+    return ops
+
+
+def _model_of(ops):
+    model = {}
+    for kind, k, v in ops:
+        if kind == "insert":
+            model.setdefault(k, v)
+        else:
+            model.pop(k, None)
+    return model
+
+
+@settings(max_examples=25, deadline=None)
+@given(op_sequences())
+def test_clht_matches_dict_model(ops):
+    """Sequential consistency: the index agrees with a dict after any
+    op sequence (inserts never overwrite; deletes remove)."""
+    idx = PCLHT(PMem(), n_buckets=4)
+    for kind, k, v in ops:
+        (idx.insert(k, v) if kind == "insert" else idx.delete(k))
+    model = _model_of(ops)
+    for k, v in model.items():
+        assert idx.lookup(k) == v
+    idx.check_invariants()
+
+
+@settings(max_examples=15, deadline=None)
+@given(op_sequences())
+def test_art_sorted_iteration_invariant(ops):
+    idx = PART(PMem())
+    for kind, k, v in ops:
+        (idx.insert(k, v) if kind == "insert" else idx.delete(k))
+    model = _model_of(ops)
+    assert list(idx.keys()) == sorted(model)
+
+
+@settings(max_examples=10, deadline=None)
+@given(op_sequences(), st.integers(0, 10 ** 6), st.data())
+def test_single_crash_point_never_loses_acked_keys(ops, seed, data):
+    """THE paper invariant: crash after ANY atomic store of ANY op —
+    every previously-acknowledged key must read back."""
+    pmem = PMem(seed=seed)
+    idx = PMasstree(pmem)
+    cut = data.draw(st.integers(0, max(len(ops) - 1, 0)))
+    acked = {}
+    for kind, k, v in ops[:cut]:
+        if kind == "insert":
+            if idx.insert(k, v):
+                acked.setdefault(k, v)
+        else:
+            idx.delete(k)
+            acked.pop(k, None)
+    if cut < len(ops):
+        kind, k, v = ops[cut]
+        n = data.draw(st.integers(0, 30))
+        pmem.arm_crash(after_stores=n)
+        try:
+            if kind == "insert":
+                if idx.insert(k, v):
+                    acked.setdefault(k, v)
+            else:
+                idx.delete(k)
+                acked.pop(k, None)
+            # op completed before the armed point fired: its effect is
+            # acknowledged and must persist like any other
+            pmem.disarm_crash()
+            crashed_key = None
+        except CrashPoint:
+            crashed_key = k
+        pmem.crash(mode="powerfail")
+        idx.recover()
+        for kk, vv in acked.items():
+            if kk != crashed_key:
+                assert idx.lookup(kk) == vv
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 14), max_size=15, unique=True))
+def test_masstree_permutation_word_roundtrip(slots):
+    assert perm_slots(perm_pack(slots)) == slots
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 7),
+       st.lists(st.integers(0, 255), min_size=7, max_size=7))
+def test_art_header_word_roundtrip(plen, prefix):
+    n, p = unpack_hdr(pack_hdr(plen, tuple(prefix)))
+    assert n == plen and p == tuple(prefix)[:plen]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=60))
+def test_arena_allocations_never_overlap(sizes):
+    from repro.core.arena import Arena, HDR_WORDS
+    arena = Arena(PMem(), "prop")
+    spans = []
+    for n in sizes:
+        ptr = arena.alloc(n)
+        for (lo, hi) in spans:
+            assert ptr + n <= lo or ptr >= hi, "overlap!"
+        spans.append((ptr, ptr + n))
+        assert ptr % (1 << 16) >= HDR_WORDS  # never in a segment header
