@@ -12,6 +12,8 @@ Prints a ``name,value,derived`` CSV summary at the end.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -23,7 +25,17 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI-speed)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the summary rows as JSON "
+                         "(BENCH_ycsb.json-style), accumulating the "
+                         "perf trajectory across runs")
     args = ap.parse_args()
+    if args.json:
+        # fail fast, not after minutes of benchmarking
+        parent = os.path.dirname(os.path.abspath(args.json))
+        os.makedirs(parent, exist_ok=True)
+        with open(args.json, "a"):
+            pass
     # full size chosen so the whole harness completes in ~10 min on
     # one CPU (the paper ran 64M keys on a 96-core Optane box; our
     # claims are relative orderings — see EXPERIMENTS.md)
@@ -51,12 +63,38 @@ def main() -> None:
         all_rows.extend(rows)
         print(f"--- {name} done in {dt:.1f}s")
     print("\nname,value,derived")
+    flat = []
     for name, payload in all_rows:
         if isinstance(payload, dict):
             for k, v in payload.items():
                 print(f"{name}.{k},{v},")
+                flat.append({"name": f"{name}.{k}", "value": v})
         else:
             print(f"{name},{payload},")
+            flat.append({"name": name, "value": payload})
+    if args.json:
+        record = {
+            "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "quick": bool(args.quick),
+            "n_load": n_load,
+            "n_run": n_run,
+            "rows": flat,
+        }
+        # accumulate: the file holds a list of run records (trajectory)
+        history = []
+        if os.path.getsize(args.json):
+            try:
+                with open(args.json) as f:
+                    prev = json.load(f)
+                history = prev if isinstance(prev, list) else [prev]
+            except ValueError:
+                print(f"warning: {args.json} held invalid JSON; restarting "
+                      "the trajectory")
+        history.append(record)
+        with open(args.json, "w") as f:
+            json.dump(history, f, indent=1)
+        print(f"wrote {len(flat)} rows to {args.json} "
+              f"(run {len(history)} in trajectory)")
 
 
 if __name__ == "__main__":

@@ -115,8 +115,14 @@ class Costs:
                      self.coll_bytes + o.coll_bytes, kinds)
 
 
+def normalize_cost_analysis(ca):
+    """Newer jax returns a one-element list from
+    ``compiled.cost_analysis()``; older versions return the dict."""
+    return ca[0] if isinstance(ca, list) else ca
+
+
 def costs_of(compiled) -> Costs:
-    ca = compiled.cost_analysis()
+    ca = normalize_cost_analysis(compiled.cost_analysis())
     text = compiled.as_text()
     coll = collective_bytes(text)
     return Costs(

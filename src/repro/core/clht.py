@@ -123,6 +123,7 @@ class PCLHT(RecipeIndex):
     # ------------------------------------------------------------------
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL
+        self._bump_epoch()  # batched readers must re-snapshot
         while True:
             status = self._insert_once(key, value)
             if status == "rehash":
@@ -194,6 +195,7 @@ class PCLHT(RecipeIndex):
         return None
 
     def delete(self, key: int) -> bool:
+        self._bump_epoch()
         self.pmem.lock_shared(self.super, 0)
         try:
             t = self._table()
@@ -220,6 +222,7 @@ class PCLHT(RecipeIndex):
     # SMO: copy-on-write rehash, atomic table swap (Condition #1)
     # ------------------------------------------------------------------
     def _rehash(self, expect_rid: Optional[int] = None) -> None:
+        self._bump_epoch()  # the table pointer is about to move
         self.pmem.lock_excl(self.super, 0)
         try:
             old = self._table()
@@ -300,3 +303,10 @@ class PCLHT(RecipeIndex):
         # chain pointers are word offsets; convert to bucket indices (-1 = none)
         nxt = np.where(nxt == NULL, -1, (nxt - HDR_WORDS) // BUCKET_WORDS)
         return keys, vals, nxt, n
+
+    def _kernel_lookup(self, snapshot, queries):
+        """The Pallas probe path: bit-identical to scalar ``lookup`` —
+        the probe window covers whole overflow chains and compares
+        full 64-bit keys (see kernels/clht_probe)."""
+        from ..kernels.clht_probe import snapshot_lookup
+        return snapshot_lookup(snapshot, queries)

@@ -16,7 +16,10 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, Iterator, List, Optional, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
 
 from .pmem import PMem, Region, CrashPoint
 
@@ -42,6 +45,25 @@ class ConversionSpec:
     notes: str = ""
 
 
+@dataclasses.dataclass
+class IndexSnapshot:
+    """A read-only export of an index's reachable state.
+
+    ``arrays`` is index-specific (see each ``export_arrays``); ``epoch``
+    is the validity key the snapshot was built under.  A snapshot is a
+    *consistent point-in-time view*: batched lookups against it are
+    bit-identical to scalar lookups issued at export time.  It must
+    never be served across a write or a crash — ``RecipeIndex.snapshot``
+    enforces that by comparing epochs.
+    """
+
+    epoch: Tuple[int, int, int]
+    arrays: Any
+    # kernel front-ends stash per-epoch prepared forms here (e.g. the
+    # pre-split int32 halves), so per-batch work is gather + kernel only
+    cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 class RecipeIndex:
     """Base class for converted PM indexes.
 
@@ -51,6 +73,15 @@ class RecipeIndex:
     point of the paper is that reads/writes already contain the
     recovery logic; recovery only reinitializes volatile lock state,
     which ``PMem.crash`` already does.
+
+    The batched read path (``snapshot``/``lookup_batch``) layers on
+    top: an index may export its reachable state as dense arrays once
+    per *epoch* and answer whole batches of lookups against them with a
+    vectorized kernel.  Writers bump the epoch (``_bump_epoch``) so a
+    stale snapshot is never served; the epoch key additionally folds in
+    the PMem store counter and crash count, so mutations through a
+    different handle to the same PMem — or a powerfail that rolls the
+    cache back to the persist image — also invalidate.
     """
 
     spec: ConversionSpec
@@ -58,6 +89,8 @@ class RecipeIndex:
 
     def __init__(self, pmem: PMem):
         self.pmem = pmem
+        self._epoch = 0
+        self._snapshot: Optional[IndexSnapshot] = None
 
     # -- the five-operation interface of §2.1 ---------------------------
     def insert(self, key: int, value: int) -> bool:
@@ -76,6 +109,80 @@ class RecipeIndex:
 
     def range_query(self, key_lo: int, key_hi: int) -> List[Tuple[int, int]]:
         raise NotImplementedError(f"{self.spec.name} is unordered")
+
+    # -- batched read path (snapshot + vectorized probe) ------------------
+    def _epoch_key(self) -> Tuple[int, int, int]:
+        """Validity key for snapshots: the index's own write epoch, the
+        PMem global store count (any mutation goes through ``store``),
+        and the crash count (powerfail rolls the cache back)."""
+        return (self._epoch, self.pmem.counters.stores, self.pmem.crashes)
+
+    def _bump_epoch(self) -> None:
+        """Writers call this on insert/delete/SMO so stale snapshots are
+        never served to batched readers."""
+        self._epoch += 1
+        self._snapshot = None
+
+    def export_arrays(self) -> Any:
+        """Dense-array export of the reachable state for batched/Pallas
+        lookups.  Index-specific layout; see PCLHT/PART."""
+        raise NotImplementedError(f"{type(self).__name__} has no array export")
+
+    def snapshot(self) -> IndexSnapshot:
+        """Return a point-in-time export, rebuilding only on epoch change."""
+        key = self._epoch_key()
+        if self._snapshot is None or self._snapshot.epoch != key:
+            arrays = self.export_arrays()
+            # exporting may count loads but performs no stores, so the
+            # key computed *before* the export is still the right one
+            self._snapshot = IndexSnapshot(epoch=key, arrays=arrays)
+        return self._snapshot
+
+    _MIN_KERNEL_BATCH = 8  # below this, kernel dispatch overhead loses
+    _MIN_REBUILD_BATCH = 512  # amortizes a snapshot re-export
+
+    def _rebuild_floor(self) -> int:
+        """Smallest batch worth rebuilding a stale snapshot for;
+        indexes with size-dependent export costs override this."""
+        return self._MIN_REBUILD_BATCH
+
+    def _kernel_lookup(self, snapshot: IndexSnapshot, queries: np.ndarray
+                       ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Vectorized probe of a snapshot: (found [Q] bool, values [Q]
+        int64), or None for an empty structure.  Kernel-backed indexes
+        implement this; the base raises so ``lookup_batch`` stays on
+        the scalar path."""
+        raise NotImplementedError
+
+    def lookup_batch(self, keys: Sequence[int], *,
+                     force_kernel: bool = False) -> List[Optional[int]]:
+        """Batched point lookups; results are bit-identical to calling
+        ``lookup`` once per key.
+
+        Dispatch is adaptive: batches below ``_MIN_KERNEL_BATCH`` — or,
+        when the snapshot is stale (a write happened), below the
+        rebuild floor — run the correct scalar fallback, which is
+        cheaper under the amortization point.  ``force_kernel`` skips
+        the floors: callers in steady read loops (the serving decode
+        path) use it to keep scalar lookups entirely off their hot
+        path.  Indexes without an array export always go scalar."""
+        stale = (self._snapshot is None
+                 or self._snapshot.epoch != self._epoch_key())
+        floor = self._rebuild_floor() if stale else self._MIN_KERNEL_BATCH
+        if len(keys) < floor and not force_kernel:
+            return [self.lookup(int(k)) for k in keys]
+        try:
+            res = self._kernel_lookup(self.snapshot(),
+                                      np.asarray(keys, np.int64))
+        except NotImplementedError:  # no array export for this index
+            return [self.lookup(int(k)) for k in keys]
+        except ImportError:  # jax-less environment: correct fallback
+            return [self.lookup(int(k)) for k in keys]
+        if res is None:  # empty structure: nothing can be found
+            return [None] * len(keys)
+        found, vals = res
+        return [v if f else None
+                for f, v in zip(found.tolist(), vals.tolist())]
 
     # -- recovery --------------------------------------------------------
     def recover(self) -> None:

@@ -116,6 +116,7 @@ class PMem:
         self.crash_after_store: Optional[int] = None
         self._stores_until_crash = 0
         self.crash_calls = 0  # total crash points seen (for samplers)
+        self.crashes = 0  # completed crash() events (snapshot invalidation)
         # Allocation log for epoch GC (RECIPE assumes a GC'd PM allocator)
         self.alloc_log: List[int] = []
 
@@ -298,6 +299,7 @@ class PMem:
                          eviction the hardware is allowed to do.
         """
         self.disarm_crash()
+        self.crashes += 1
         if mode == "powerfail":
             for region in self.regions.values():
                 # pending-but-unfenced flushes may or may not have landed;

@@ -1,0 +1,104 @@
+"""Batched P-ART radix descent — Pallas TPU kernel.
+
+A tile of queries descends the exported node pages together: at each of
+the at-most-9 steps (8 key bytes + the final leaf), every lane gathers
+its current node's ``level`` word, picks the key byte at that level,
+and hops through the 256-wide child row.  Trusting ``level`` is exactly
+the scalar reader's stale-prefix tolerance (paper §6.4): a node whose
+prefix header was left stale by an interrupted path-compression SMO is
+traversed by level and the full 64-bit key is verified at the leaf, so
+batched results are bit-identical to scalar ``lookup`` even mid-SMO or
+post-crash.  Keys/values travel as (lo, hi) int32 halves.
+
+The node pages (children [N,256], level, leaf words) are broadcast to
+every grid step; queries are tiled.  Like the other kernels this runs
+interpret-mode by default (the gathers lower to dynamic-slice chains on
+real TPU backends; interpret executes them directly on CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# sized to swallow a whole batch per grid step in interpret mode — the
+# node-page broadcast and the fixed per-step cost are paid once
+QUERY_BLOCK = 4096
+KEY_BYTES = 8
+
+
+def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
+                    is_leaf_ref, lklo_ref, lkhi_ref, lvlo_ref, lvhi_ref,
+                    found_ref, olo_ref, ohi_ref):
+    qbytes = qbytes_ref[...]          # [QB, KEY_BYTES]
+    qlo = qlo_ref[...][:, 0]          # [QB]
+    qhi = qhi_ref[...][:, 0]
+    children = children_ref[...]      # [N, 256]
+    level = level_ref[...][:, 0]      # [N]
+    is_leaf = is_leaf_ref[...][:, 0]
+    lklo = lklo_ref[...][:, 0]
+    lkhi = lkhi_ref[...][:, 0]
+    lvlo = lvlo_ref[...][:, 0]
+    lvhi = lvhi_ref[...][:, 0]
+    QB = qbytes.shape[0]
+    node = jnp.zeros((QB,), jnp.int32)  # node 0 is the root
+    active = jnp.ones((QB,), jnp.bool_)
+    found = jnp.zeros((QB,), jnp.bool_)
+    olo = jnp.zeros((QB,), jnp.int32)
+    ohi = jnp.zeros((QB,), jnp.int32)
+    # levels strictly increase along any path, so 8 internal hops + the
+    # leaf check bound the descent; finished lanes just idle
+    for _ in range(KEY_BYTES + 1):
+        leaf = is_leaf[node] != 0
+        # leaf verification: full 64-bit key AND live (non-tombstone) value
+        hit = (active & leaf & (lklo[node] == qlo) & (lkhi[node] == qhi)
+               & ((lvlo[node] != 0) | (lvhi[node] != 0)))
+        found = found | hit
+        olo = jnp.where(hit, lvlo[node], olo)
+        ohi = jnp.where(hit, lvhi[node], ohi)
+        active = active & ~leaf
+        lvl = jnp.clip(level[node], 0, KEY_BYTES - 1)
+        byte = jnp.take_along_axis(qbytes, lvl[:, None], axis=1)[:, 0]
+        child = children[node, byte]
+        active = active & (child >= 0)
+        node = jnp.where(active, child, node)
+    found_ref[...] = found[:, None]
+    olo_ref[...] = olo[:, None]
+    ohi_ref[...] = ohi[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
+def art_descend(qbytes, qlo, qhi, children, level, is_leaf,
+                lklo, lkhi, lvlo, lvhi, *,
+                query_block: int = QUERY_BLOCK, interpret: bool = True):
+    """qbytes: [Q, 8] int32 big-endian key bytes; qlo/qhi: [Q] int32 key
+    halves; children: [N, 256] int32 (-1 none); level/is_leaf/leaf
+    key-value halves: [N] int32.  Returns (found [Q] bool, value_lo,
+    value_hi [Q] int32)."""
+    Q = qbytes.shape[0]
+    N = children.shape[0]
+    qb = min(query_block, Q)
+    assert Q % qb == 0, (Q, qb)
+    grid = (Q // qb,)
+    qtile = lambda w: pl.BlockSpec((qb, w), lambda i: (i, 0))
+    bcast = lambda w: pl.BlockSpec((N, w), lambda i: (0, 0))
+    col = lambda a: a.reshape(-1, 1)
+    found, olo, ohi = pl.pallas_call(
+        _descend_kernel,
+        grid=grid,
+        in_specs=[qtile(KEY_BYTES), qtile(1), qtile(1),
+                  bcast(256), bcast(1), bcast(1),
+                  bcast(1), bcast(1), bcast(1), bcast(1)],
+        out_specs=[qtile(1), qtile(1), qtile(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qbytes, col(qlo), col(qhi), children, col(level), col(is_leaf),
+      col(lklo), col(lkhi), col(lvlo), col(lvhi))
+    return found[:, 0], olo[:, 0], ohi[:, 0]

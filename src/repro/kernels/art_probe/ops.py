@@ -1,0 +1,72 @@
+"""Host wrapper: PART.export_arrays dict -> art_descend kernel call.
+
+Splits 64-bit leaf words into int32 halves, extracts big-endian key
+bytes, pads the query batch to a whole number of kernel blocks, and
+recombines the halves of the result.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..probe import combine64, pad_queries, split64
+from .kernel import QUERY_BLOCK, art_descend
+
+KEY_BYTES = 8
+
+
+def key_bytes(keys: np.ndarray) -> np.ndarray:
+    """[Q] int64 -> [Q, 8] int32 big-endian bytes (core.art.key_byte)."""
+    u = np.asarray(keys).astype(np.uint64)
+    shifts = np.uint64(8) * np.arange(KEY_BYTES - 1, -1, -1, dtype=np.uint64)
+    return ((u[:, None] >> shifts[None, :]) & np.uint64(0xFF)).astype(np.int32)
+
+
+def _prepare(arrays: Dict[str, np.ndarray]) -> tuple:
+    """Device-ready node pages: split leaf words, convert once."""
+    lklo, lkhi = split64(arrays["leaf_key"])
+    lvlo, lvhi = split64(arrays["leaf_val"])
+    return (jnp.asarray(arrays["children"]),
+            jnp.asarray(arrays["level"], jnp.int32),
+            jnp.asarray(arrays["is_leaf"], jnp.int32),
+            jnp.asarray(lklo), jnp.asarray(lkhi),
+            jnp.asarray(lvlo), jnp.asarray(lvhi))
+
+
+def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
+             ) -> Tuple[np.ndarray, np.ndarray]:
+    q = np.asarray(queries, np.int64)
+    Q = q.shape[0]
+    pad = pad_queries(Q)
+    if pad:
+        q = np.pad(q, (0, pad))  # padded lanes miss at the leaf check
+    qb = min(QUERY_BLOCK, q.shape[0])
+    qlo, qhi = split64(q)
+    found, olo, ohi = art_descend(
+        jnp.asarray(key_bytes(q)), jnp.asarray(qlo), jnp.asarray(qhi),
+        *pages, query_block=qb, interpret=interpret)
+    found = np.asarray(found)[:Q]
+    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    return found, np.where(found, values, 0)
+
+
+def batched_lookup(queries: np.ndarray, arrays: Dict[str, np.ndarray], *,
+                   interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """queries: [Q] int64; arrays: PART.export_arrays output.
+    Returns (found [Q] bool, values [Q] int64), bit-identical to scalar
+    ``PART.lookup`` against the same snapshot."""
+    return _descend(queries, _prepare(arrays), interpret=interpret)
+
+
+def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched lookup against an ``IndexSnapshot`` of PART node pages;
+    the split + device conversion is memoized on the snapshot."""
+    pages = snap.cache.get("art_probe")
+    if pages is None:
+        pages = _prepare(snap.arrays)
+        snap.cache["art_probe"] = pages
+    return _descend(queries, pages, interpret=interpret)

@@ -1,0 +1,37 @@
+"""Pure-numpy oracle for the batched ART radix descent."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+KEY_BYTES = 8
+
+
+def descend_ref(queries: np.ndarray, arrays: Dict[str, np.ndarray]
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Same descent as kernel.py, scalar per query: trust ``level``,
+    hop the 256-wide child rows, verify the full key at the leaf."""
+    children = arrays["children"]
+    level = arrays["level"]
+    is_leaf = arrays["is_leaf"]
+    leaf_key = arrays["leaf_key"]
+    leaf_val = arrays["leaf_val"]
+    Q = len(queries)
+    found = np.zeros(Q, bool)
+    vals = np.zeros(Q, np.int64)
+    for i, key in enumerate(np.asarray(queries, np.int64)):
+        node = 0
+        for _ in range(KEY_BYTES + 1):
+            if is_leaf[node]:
+                if leaf_key[node] == key and leaf_val[node] != 0:
+                    found[i] = True
+                    vals[i] = leaf_val[node]
+                break
+            byte = (int(key) >> (8 * (KEY_BYTES - 1 - int(level[node])))) & 0xFF
+            child = children[node, byte]
+            if child < 0:
+                break
+            node = child
+    return found, vals

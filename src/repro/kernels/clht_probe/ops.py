@@ -1,27 +1,120 @@
-"""jit'd wrapper: gather each query's probe window from the exported
-P-CLHT arrays (keys/vals/next as produced by PCLHT.export_arrays), then
-run the VPU compare kernel."""
+"""Batched P-CLHT lookup over the arrays PCLHT.export_arrays produces.
+
+The probe-window gather lives in kernels/probe (shared with the other
+index front-ends); this module contributes only what is CLHT-specific:
+the splitmix64 bucket hash, mirrored bit-for-bit from core.clht._mix so
+a batched query probes exactly the bucket the scalar reader would.  The
+wide compare runs on full 64-bit keys via the paired-half probe64
+kernel — results are bit-identical to scalar ``lookup``, including
+values that exceed 32 bits.
+
+``tag_lookup`` keeps the original 32-bit-tag demo path (one int32 lane
+per key, collisions possible) for kernel benchmarking.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..probe import combine64, pad_queries, probe64_lookup, split64
+from ..probe.kernel import QUERY_BLOCK, probe64
 from .kernel import clht_probe
 
 SLOTS = 3
-CHAIN_DEPTH = 4  # probe window covers the bucket + up to 3 chained buckets
+CHAIN_DEPTH = 4  # tag path: bucket + up to 3 chained buckets
+
+_U64 = np.uint64
+
+
+def mix64(keys: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer — must match core.clht._mix."""
+    z = keys.astype(np.uint64) + _U64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return z ^ (z >> _U64(31))
+
+
+def batched_lookup(queries: np.ndarray, keys: np.ndarray, vals: np.ndarray,
+                   nxt: np.ndarray, *, n_buckets: int,
+                   interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+    """queries: [Q] int64; keys/vals: [R, SLOTS] int64 bucket-major slot
+    arrays; nxt: [R] int64 chain row index (-1 none) — the layout of
+    PCLHT.export_arrays.  Returns (found [Q] bool, values [Q] int64)."""
+    q = np.asarray(queries, np.int64)
+    bucket = (mix64(q) % _U64(n_buckets)).astype(np.int64)
+    return probe64_lookup(q, bucket, np.asarray(nxt, np.int64),
+                          keys, vals, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
+def _gather_probe(bucket, qlo, qhi, klo, khi, vlo, vhi, nxt, *,
+                  depth: int, interpret: bool):
+    """Fused probe: the XLA gather chases each query's overflow chain
+    (``depth`` = the snapshot's longest chain) and feeds the windows
+    straight to the probe64 kernel — nothing materializes on the host."""
+    rows = []
+    cur = bucket
+    for _ in range(depth):
+        rows.append(cur)
+        cur = jnp.where(cur >= 0, nxt[jnp.maximum(cur, 0)], -1)
+    windows = []
+    for arr in (klo, khi, vlo, vhi):
+        parts = [jnp.where(r[:, None] >= 0, arr[jnp.maximum(r, 0)], 0)
+                 for r in rows]
+        windows.append(jnp.concatenate(parts, axis=1))
+    qb = min(QUERY_BLOCK, qlo.shape[0])
+    return probe64(qlo, qhi, *windows, query_block=qb, interpret=interpret)
+
+
+def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Batched lookup against an ``IndexSnapshot`` of PCLHT arrays.
+
+    Per epoch (memoized on the snapshot): split the table into int32
+    halves, ship it to the device, and measure the longest overflow
+    chain.  Per batch: 64-bit bucket hash on the host (splitmix64 needs
+    real uint64), then one fused gather+probe call."""
+    prepared = snap.cache.get("clht_probe")
+    if prepared is None:
+        keys, vals, nxt, n = snap.arrays
+        nxt = np.asarray(nxt, np.int64)
+        depth, cur = 1, nxt[nxt >= 0]
+        while cur.size and depth < 64:  # longest chain in this epoch
+            depth += 1
+            hops = nxt[cur]
+            cur = hops[hops >= 0]
+        halves = [jnp.asarray(h) for kv in (keys, vals) for h in split64(kv)]
+        prepared = (halves, jnp.asarray(nxt.astype(np.int32)), depth, int(n))
+        snap.cache["clht_probe"] = prepared
+    halves, nxt_dev, depth, n = prepared
+    q = np.asarray(queries, np.int64)
+    Q = q.shape[0]
+    pad = pad_queries(Q)
+    if pad:
+        # padded queries are 0 == the empty-slot sentinel; they probe
+        # bucket mix64(0) % n and the rows are sliced off below
+        q = np.pad(q, (0, pad))
+    bucket = (mix64(q) % _U64(n)).astype(np.int32)
+    qlo, qhi = split64(q)
+    found, olo, ohi = _gather_probe(
+        jnp.asarray(bucket), jnp.asarray(qlo), jnp.asarray(qhi), *halves,
+        nxt_dev, depth=depth, interpret=interpret)
+    found = np.asarray(found)[:Q]
+    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    return found, np.where(found, values, 0)
 
 
 @functools.partial(jax.jit, static_argnames=("n_buckets", "interpret"))
-def batched_lookup(queries, keys, vals, nxt, *, n_buckets: int,
-                   interpret: bool = True):
-    """queries: [Q] int32; keys/vals: [NB_total, SLOTS] int32;
-    nxt: [NB_total] int32 bucket index (-1 none).  Returns (found, val)."""
-    Q = queries.shape[0]
-    # splitmix-like 32-bit mix, mirroring core.clht._mix mod n_buckets
+def tag_lookup(queries, keys, vals, nxt, *, n_buckets: int,
+               interpret: bool = True):
+    """The original 32-bit-tag data plane: queries hashed with a 32-bit
+    mix, one lane per key, fixed CHAIN_DEPTH window.  Collisions must be
+    re-verified against the authoritative index."""
     z = (queries.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
     z = z ^ (z >> jnp.uint32(16))
     b = (z % jnp.uint32(n_buckets)).astype(jnp.int32)

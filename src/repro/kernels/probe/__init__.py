@@ -1,0 +1,6 @@
+from .kernel import probe64
+from .ops import (combine64, gather_chain_windows, pad_queries, split64,
+                  probe64_lookup, probe64_windows)
+
+__all__ = ["probe64", "probe64_lookup", "probe64_windows", "split64",
+           "combine64", "gather_chain_windows", "pad_queries"]

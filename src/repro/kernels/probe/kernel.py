@@ -1,0 +1,67 @@
+"""64-bit-exact batched probe — Pallas TPU kernel.
+
+The shared wide-compare engine of the batched read path: every query
+carries a pre-gathered probe window (its hash bucket's slots plus the
+whole overflow chain, or any other candidate set), and the kernel does
+the VPU compare + first-hit select.  PM words are 64-bit but the VPU
+lanes are 32-bit, so keys and values travel as (lo, hi) int32 halves
+and a hit requires both halves to match — no tag collisions, results
+are bit-identical to the scalar control-plane lookup.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One grid step per QUERY_BLOCK queries.  Interpret mode (the default)
+# pays a fixed per-step cost, so the block is sized to swallow a whole
+# serving/YCSB batch in one step; compiled TPU runs can tile it down.
+QUERY_BLOCK = 4096
+
+
+def _probe64_kernel(qlo_ref, qhi_ref, klo_ref, khi_ref, vlo_ref, vhi_ref,
+                    found_ref, olo_ref, ohi_ref):
+    qlo = qlo_ref[...]  # [QB, 1]
+    qhi = qhi_ref[...]
+    klo = klo_ref[...]  # [QB, W]
+    khi = khi_ref[...]
+    hit = (klo == qlo) & (khi == qhi)  # paired-half VPU wide compare
+    found = jnp.any(hit, axis=1, keepdims=True)
+    idx = jnp.argmax(hit.astype(jnp.int32), axis=1)  # first hit wins
+    onehot = jax.lax.broadcasted_iota(jnp.int32, klo.shape, 1) == idx[:, None]
+    olo = jnp.sum(jnp.where(onehot, vlo_ref[...], 0), axis=1, keepdims=True)
+    ohi = jnp.sum(jnp.where(onehot, vhi_ref[...], 0), axis=1, keepdims=True)
+    found_ref[...] = found
+    olo_ref[...] = jnp.where(found, olo, 0)
+    ohi_ref[...] = jnp.where(found, ohi, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
+def probe64(qlo, qhi, klo, khi, vlo, vhi, *,
+            query_block: int = QUERY_BLOCK, interpret: bool = True):
+    """qlo/qhi: [Q] int32 query-key halves; klo/khi/vlo/vhi: [Q, W] int32
+    probe-window halves (0-padded).  Returns (found [Q] bool,
+    value_lo [Q] int32, value_hi [Q] int32)."""
+    Q, W = klo.shape
+    qb = min(query_block, Q)
+    assert Q % qb == 0, (Q, qb)
+    grid = (Q // qb,)
+    win = pl.BlockSpec((qb, W), lambda i: (i, 0))
+    col = pl.BlockSpec((qb, 1), lambda i: (i, 0))
+    found, olo, ohi = pl.pallas_call(
+        _probe64_kernel,
+        grid=grid,
+        in_specs=[col, col, win, win, win, win],
+        out_specs=[col, col, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qlo.reshape(Q, 1), qhi.reshape(Q, 1), klo, khi, vlo, vhi)
+    return found[:, 0], olo[:, 0], ohi[:, 0]

@@ -1,0 +1,127 @@
+"""Host-side helpers shared by the batched index front-ends.
+
+The control plane hands us int64 PM words (keys < 2^63, values up to
+62 bits); the TPU data plane wants int32 lanes.  These helpers split
+words into (lo, hi) halves, gather per-query probe windows by chasing
+overflow chains, and pad query batches to the kernel's block multiple.
+All of it is plain numpy: the gathers are snapshot-array indexing (the
+XLA/VPU work is the wide compare in kernel.py), and 64-bit hashing
+cannot run inside default-precision jax anyway.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import QUERY_BLOCK, probe64
+
+LANES = 128  # pad probe windows to whole VREG rows
+
+_M32 = np.uint64(0xFFFFFFFF)
+
+
+def split64(a: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """int64 words -> (lo, hi) int32 halves (bit-exact round trip)."""
+    u = np.asarray(a).astype(np.uint64)
+    lo = (u & _M32).astype(np.uint32).astype(np.int32)
+    hi = (u >> np.uint64(32)).astype(np.uint32).astype(np.int32)
+    return lo, hi
+
+
+def combine64(lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    """(lo, hi) int32 halves -> int64 words."""
+    u = (np.asarray(hi).astype(np.int64) & 0xFFFFFFFF) << 32
+    return u | (np.asarray(lo).astype(np.int64) & 0xFFFFFFFF)
+
+
+def gather_chain_windows(start: np.ndarray, nxt: np.ndarray,
+                         slot_arrays: Sequence[np.ndarray],
+                         *, max_chain: int = 64) -> List[np.ndarray]:
+    """Per-query probe windows over chained rows.
+
+    start: [Q] row index of each query's head bucket; nxt: [R] next-row
+    index (-1 = end of chain); each of ``slot_arrays`` is a row-major
+    [R, S] slot array (e.g. the lo/hi halves of keys and values) that
+    gets windowed identically.  Follows every chain to its end (up to
+    ``max_chain`` hops, matching the scalar reader's full-chain walk)
+    and returns [Q, depth*S] windows, zero-padded where a chain ends
+    early — so a wide compare over a window sees exactly the slots the
+    scalar probe would."""
+    rows: List[List[np.ndarray]] = [[] for _ in slot_arrays]
+    cur = start.astype(np.int64)
+    for _ in range(max_chain):
+        live = cur >= 0
+        if not live.any() and rows[0]:
+            break
+        safe = np.where(live, cur, 0)
+        mask = live[:, None]
+        for out, arr in zip(rows, slot_arrays):
+            out.append(np.where(mask, arr[safe], 0))
+        cur = np.where(live, nxt[safe], -1)
+    windows = [np.concatenate(r, axis=1) for r in rows]
+    pad = (-windows[0].shape[1]) % LANES
+    if pad:
+        windows = [np.pad(w, ((0, 0), (0, pad))) for w in windows]
+    return windows
+
+
+def pad_queries(n: int, block: int = QUERY_BLOCK) -> int:
+    """Rows to add to the query batch before a jit'd probe.
+
+    Above one block: round up to a whole number of blocks.  Below one
+    block: round up to the next power of two, so the family of traced
+    shapes stays small (serving batches drift by a few queries every
+    step; retracing per distinct count would dwarf the probe itself)."""
+    if n >= block:
+        return (-n) % block
+    p = 8
+    while p < n:
+        p <<= 1
+    return p - n
+
+
+def probe64_windows(queries: np.ndarray, split_windows: Sequence[np.ndarray],
+                    *, interpret: bool = True
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Run probe64 over pre-gathered, pre-split windows.
+
+    queries: [Q] int64; split_windows: (klo, khi, vlo, vhi), each
+    [Q, W] int32.  Returns (found [Q] bool, values [Q] int64)."""
+    Q = queries.shape[0]
+    klo, khi, vlo, vhi = split_windows
+    pad = pad_queries(Q)
+    if pad:
+        # padded queries are 0 == the empty-slot sentinel, so they may
+        # "hit" padding slots — harmless, the rows are sliced off below
+        queries = np.pad(queries, (0, pad))
+        klo, khi, vlo, vhi = (np.pad(w, ((0, pad), (0, 0)))
+                              for w in (klo, khi, vlo, vhi))
+    qlo, qhi = split64(queries)
+    qb = min(QUERY_BLOCK, qlo.shape[0])
+    found, olo, ohi = probe64(
+        jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(klo),
+        jnp.asarray(khi), jnp.asarray(vlo), jnp.asarray(vhi),
+        query_block=qb, interpret=interpret)
+    found = np.asarray(found)[:Q]
+    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    return found, np.where(found, values, 0)
+
+
+def probe64_lookup(queries: np.ndarray, start: np.ndarray, nxt: np.ndarray,
+                   keys: np.ndarray, vals: np.ndarray, *,
+                   interpret: bool = True
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Gather chain windows from int64 slot arrays and run probe64.
+
+    queries: [Q] int64; start: [Q] head-row indices; nxt/keys/vals as in
+    ``gather_chain_windows``.  Returns (found [Q] bool, values [Q]
+    int64), bit-identical to a scalar chain walk + 64-bit compare.
+    Epoch-cached callers pre-split the slot arrays once and use
+    ``probe64_windows`` with int32 halves instead."""
+    klo, khi = split64(keys)
+    vlo, vhi = split64(vals)
+    windows = gather_chain_windows(start, nxt, (klo, khi, vlo, vhi))
+    return probe64_windows(queries, windows, interpret=interpret)

@@ -45,7 +45,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     print(compiled.memory_analysis())
-    print({k: v for k, v in compiled.cost_analysis().items()
+    from ..analysis.roofline import normalize_cost_analysis
+    print({k: v for k, v in
+           normalize_cost_analysis(compiled.cost_analysis()).items()
            if k in ("flops", "bytes accessed")})
     record = {
         "arch": arch,

@@ -13,6 +13,13 @@ metadata plane is built from RECIPE-converted indexes.
 * **Allocator** — free list persisted as a bitmap region; allocation
   commit = single atomic word store (bit set), GC reconciles leaks.
 
+Reads ride the batched execution layer: every decode tick resolves all
+running sequences' page translations in ONE probe of the block table's
+epoch-cached snapshot (kernels/clht_probe), and prefix matching probes
+all block hashes of a prompt in one P-ART descent (kernels/art_probe).
+The decode hot path issues zero scalar ``lookup`` calls — writes
+(grants, admissions) bump the index epoch and the next tick re-exports.
+
 The compute plane (decode attention over the pages) is
 kernels/paged_attention; this module is the control plane and a
 CPU-scale reference server driving reduced-config models.
@@ -89,6 +96,16 @@ class PagedKVManager:
         v = self.table.lookup(self._bt_key(seq_id, logical))
         return None if v is None else v - 1
 
+    def lookup_pages_batch(self, pairs: List[Tuple[int, int]]
+                           ) -> List[Optional[int]]:
+        """Resolve many (seq_id, logical) translations in one batched
+        probe over the block table's snapshot — the decode hot path."""
+        if not pairs:
+            return []
+        res = self.table.lookup_batch(
+            [self._bt_key(s, l) for s, l in pairs], force_kernel=True)
+        return [None if v is None else v - 1 for v in res]
+
     def release_seq(self, seq_id: int, n_logical: int) -> None:
         for l in range(n_logical):
             p = self.lookup_page(seq_id, l)
@@ -97,17 +114,33 @@ class PagedKVManager:
                 self.free_page(p)
 
     # -- prefix cache -----------------------------------------------------
-    def prefix_lookup(self, tokens: List[int]) -> Tuple[int, List[int]]:
-        """Longest cached prefix: returns (n_tokens_covered, page_ids)."""
-        h, pages, covered = 0, [], 0
+    def _block_hashes(self, tokens: List[int]) -> List[int]:
+        """Rolling hash of every whole token block — the hash chain does
+        not depend on lookup results, so all blocks can probe at once."""
+        h, out = 0, []
         ps = self.page_size
         for b in range(len(tokens) // ps):
             h = _roll_hash(h, tokens[b * ps:(b + 1) * ps])
-            page = self.prefix.lookup(h)
+            out.append(h)
+        return out
+
+    def prefix_lookup(self, tokens: List[int]) -> Tuple[int, List[int]]:
+        """Longest cached prefix: returns (n_tokens_covered, page_ids).
+        All block hashes go through one batched P-ART probe; the match
+        still ends at the first miss, exactly as the scalar walk did.
+        This runs at admission (prefill), right after prefix_insert
+        bumped the epoch — so adaptive dispatch is left on: forcing the
+        kernel here would re-export the whole tree for a handful of
+        hashes every admission."""
+        hashes = self._block_hashes(tokens)
+        if not hashes:
+            return 0, []
+        pages, covered = [], 0
+        for page in self.prefix.lookup_batch(hashes):
             if page is None:
                 break
             pages.append(page - 1)
-            covered += ps
+            covered += self.page_size
         return covered, pages
 
     def prefix_insert(self, tokens: List[int], pages: List[int]) -> None:
@@ -150,9 +183,11 @@ class Server:
         self.queue: List[Request] = []
         self.running: List[Request] = []
         self.caches: Dict[int, Any] = {}  # rid -> dense cache (compute)
+        self.page_tables: Dict[int, List[Optional[int]]] = {}  # rid -> pages
         self._next_rid = 0
         self.stats = {"prefill_tokens": 0, "prefix_hits": 0,
-                      "decode_steps": 0}
+                      "decode_steps": 0, "page_translations": 0,
+                      "translation_batches": 0}
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
         rid = self._next_rid
@@ -192,12 +227,30 @@ class Server:
         tok = int(jnp.argmax(logits[0]))
         req.out.append(tok)
 
+    def _resolve_page_tables(self) -> None:
+        """Translate every running sequence's logical pages in ONE
+        batched probe of the block table (the decode hot path issues no
+        scalar ``lookup`` at all).  The snapshot is epoch-cached inside
+        the index, so steady decoding re-reads it for free and any
+        grant/admission automatically forces a re-export."""
+        pairs = [(req.rid, l) for req in self.running
+                 for l in range(-(-req.pos // self.page_size))]
+        phys = self.kv.lookup_pages_batch(pairs)
+        tables: Dict[int, List[Optional[int]]] = {r.rid: [] for r in self.running}
+        for (rid, _), p in zip(pairs, phys):
+            tables[rid].append(p)
+        self.page_tables = tables
+        self.stats["page_translations"] += len(pairs)
+        self.stats["translation_batches"] += 1
+
     def step(self, max_len: int = 128) -> None:
         """One scheduler tick: admit + decode one token for all running."""
         while self.queue and len(self.running) < self.max_batch:
             req = self.queue.pop(0)
             self._prefill(req, max_len)
             self.running.append(req)
+        if self.running:
+            self._resolve_page_tables()
         finished = []
         for req in self.running:
             tok = jnp.asarray([req.out[-1]], jnp.int32)
@@ -214,6 +267,7 @@ class Server:
         for req in finished:
             self.running.remove(req)
             del self.caches[req.rid]
+            self.page_tables.pop(req.rid, None)
 
     def run_until_drained(self, max_len: int = 128,
                           max_ticks: int = 1000) -> List[Request]:
@@ -235,3 +289,4 @@ class Server:
         self.kv.recover()
         self.caches.clear()
         self.running.clear()
+        self.page_tables.clear()

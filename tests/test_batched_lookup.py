@@ -1,0 +1,150 @@
+"""Batched execution layer: lookup_batch must be bit-identical to
+scalar lookup for P-CLHT and P-ART — on YCSB-B/C op streams, across
+epochs (inserts/deletes/resize invalidate snapshots), after powerfail
+crashes, and through the kernels' padding/windowing edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core import PMem, PCLHT, PART, IndexSnapshot
+from repro.core.ycsb import generate, run_workload
+
+RNG = np.random.default_rng(42)
+
+
+def _mk_clht(pmem):
+    return PCLHT(pmem, n_buckets=16)  # small: forces chains + rehash
+
+
+FACTORIES = [("P-CLHT", _mk_clht), ("P-ART", lambda p: PART(p))]
+
+
+def _keys(n, hi=1 << 60):
+    return list(dict.fromkeys(int(k) for k in RNG.integers(1, hi, size=n)))
+
+
+def _assert_identical(idx, probe, force=False):
+    scalar = [idx.lookup(int(k)) for k in probe]
+    kwargs = {"force_kernel": True} if force else {}
+    batched = idx.lookup_batch(probe, **kwargs)
+    assert scalar == batched, [
+        (k, s, b) for k, s, b in zip(probe, scalar, batched) if s != b][:5]
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_batched_equals_scalar_uniform(name, factory):
+    idx = factory(PMem())
+    keys = _keys(600)
+    for k in keys:
+        idx.insert(k, (k % 1000003) + 1)
+    probe = keys[:200] + _keys(200)  # hits + misses
+    _assert_identical(idx, probe, force=True)
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_batched_equals_scalar_after_deletes(name, factory):
+    idx = factory(PMem())
+    keys = _keys(400)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    for k in keys[::3]:
+        idx.delete(k)
+    _assert_identical(idx, keys, force=True)
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_batched_equals_scalar_post_crash(name, factory):
+    pmem = PMem()
+    idx = factory(pmem)
+    keys = _keys(400)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    idx.lookup_batch(keys, force_kernel=True)  # build a pre-crash snapshot
+    pmem.crash(mode="powerfail")
+    # the stale pre-crash snapshot must not be served
+    _assert_identical(idx, keys + _keys(100), force=True)
+
+
+def test_clht_batched_mid_resize_epochs():
+    """Interleave lookups with inserts that trigger CoW rehashes; the
+    snapshot epoch must track every table-pointer swap."""
+    pmem = PMem()
+    idx = PCLHT(pmem, n_buckets=4)  # tiny: rehashes constantly
+    keys = _keys(500)
+    probe_base = []
+    for i, k in enumerate(keys):
+        idx.insert(k, (k % 1000003) + 1)
+        probe_base.append(k)
+        if i % 60 == 0 and i > 0:
+            _assert_identical(idx, probe_base[-120:], force=True)
+    assert idx.pmem.load(idx._table(), 0) > 4, "no resize exercised"
+    _assert_identical(idx, probe_base + _keys(100), force=True)
+
+
+@pytest.mark.parametrize("wl_name", ["B", "C"])
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_batched_ycsb_found_counts_match(name, factory, wl_name):
+    """run_workload's batched phase executor preserves op counts and
+    per-op results on the paper's read-dominant mixes."""
+    wl = generate(wl_name, 500, 500, seed=3)
+    scalar_idx = factory(PMem())
+    run_workload(scalar_idx, wl, phase="load")
+    scalar = run_workload(scalar_idx, wl, phase="run")
+    batched_idx = factory(PMem())
+    run_workload(batched_idx, wl, phase="load")
+    batched = run_workload(batched_idx, wl, phase="run", batch_lookups=True,
+                           max_batch=128)
+    assert scalar["lookup"] == batched["lookup"]
+    assert scalar["found"] == batched["found"]
+    assert scalar["insert"] == batched["insert"]
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_batched_empty_and_tiny(name, factory):
+    idx = factory(PMem())
+    assert idx.lookup_batch([]) == []
+    assert idx.lookup_batch([5, 7], force_kernel=True) == [None, None]
+    idx.insert(5, 55)
+    assert idx.lookup_batch([5, 7], force_kernel=True) == [55, None]
+
+
+def test_snapshot_epoch_invalidation_unit():
+    """snapshot() memoizes per epoch and rebuilds on write/crash."""
+    pmem = PMem()
+    idx = PCLHT(pmem, n_buckets=16)
+    idx.insert(10, 1)
+    s1 = idx.snapshot()
+    assert isinstance(s1, IndexSnapshot)
+    assert idx.snapshot() is s1  # cached while clean
+    idx.insert(11, 2)
+    s2 = idx.snapshot()
+    assert s2 is not s1
+    pmem.crash(mode="powerfail")
+    assert idx.snapshot() is not s2
+
+
+def test_scalar_fallback_for_indexes_without_export():
+    """Every RecipeIndex gets a correct lookup_batch via the base
+    scalar fallback, even with no export_arrays implementation."""
+    from repro.core import PBwTree
+    idx = PBwTree(PMem())
+    keys = _keys(40)
+    for k in keys:
+        idx.insert(k, k % 1000 + 1)
+    assert idx.lookup_batch(keys) == [idx.lookup(k) for k in keys]
+
+
+def test_values_above_32_bits_roundtrip():
+    """The paired-half kernels must return >32-bit values exactly."""
+    idx = PCLHT(PMem(), n_buckets=8)
+    art = PART(PMem())
+    big = (1 << 61) + 12345678901
+    for i, k in enumerate(_keys(64)):
+        idx.insert(k, big + i)
+        art.insert(k, big + i)
+    ks = list(idx.keys())
+    assert idx.lookup_batch(ks, force_kernel=True) == \
+        [idx.lookup(k) for k in ks]
+    ks2 = list(art.keys())
+    assert art.lookup_batch(ks2, force_kernel=True) == \
+        [art.lookup(k) for k in ks2]

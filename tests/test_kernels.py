@@ -134,21 +134,98 @@ def test_clht_probe(Q, qb):
 
 
 def test_clht_probe_end_to_end_with_index():
-    """Control-plane P-CLHT → exported arrays → Pallas batched lookup."""
+    """Control-plane P-CLHT → exported arrays → Pallas batched lookup,
+    bit-identical to the scalar reader (full 64-bit keys and values)."""
     from repro.core import PMem, PCLHT
+    from repro.kernels.clht_probe import batched_lookup
     pmem = PMem()
     ht = PCLHT(pmem, n_buckets=64, grow=False)
-    keys = [int(k) for k in RNG.integers(1, 1 << 20, size=100)]
+    keys = [int(k) for k in RNG.integers(1, 1 << 60, size=100)]
     for k in dict.fromkeys(keys):
         ht.insert(k, k * 3)
     ek, ev, enxt, nb = ht.export_arrays()
-    # 32-bit data plane: here keys < 2^20 so the tags are exact
-    import numpy as _np
-    hits = 0
-    for k in dict.fromkeys(keys):
-        found = any((ek == k).flatten())
-        hits += found
-    assert hits == len(dict.fromkeys(keys))
+    live = list(dict.fromkeys(keys))
+    misses = [int(k) for k in RNG.integers(1, 1 << 60, size=50)]
+    queries = np.asarray(live + misses, np.int64)
+    found, vals = batched_lookup(queries, ek, ev, enxt, n_buckets=nb)
+    for q, f, v in zip(queries, found, vals):
+        ref = ht.lookup(int(q))
+        assert (ref is not None) == bool(f)
+        if ref is not None:
+            assert ref == int(v)
+
+
+# ----------------------------------------------------------------------
+# probe64 (shared 64-bit paired-half compare)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("Q,W", [(256, 128), (512, 24), (1024, 9)])
+def test_probe64_matches_oracle(Q, W):
+    from repro.kernels.probe import probe64, split64, combine64
+    wk = RNG.integers(0, 1 << 62, size=(Q, W)).astype(np.int64)
+    wv = RNG.integers(1, 1 << 62, size=(Q, W)).astype(np.int64)
+    hit_col = RNG.integers(0, W, size=Q)
+    take = RNG.random(Q) < 0.5
+    q = np.where(take, wk[np.arange(Q), hit_col],
+                 np.int64((1 << 62) + 7))  # guaranteed miss
+    qlo, qhi = split64(q)
+    klo, khi = split64(wk)
+    vlo, vhi = split64(wv)
+    f, olo, ohi = probe64(*map(jnp.asarray, (qlo, qhi, klo, khi, vlo, vhi)),
+                          query_block=256)
+    f = np.asarray(f)
+    got = combine64(np.asarray(olo), np.asarray(ohi))
+    # oracle: first column where the full 64-bit key matches
+    hit = wk == q[:, None]
+    exp_found = hit.any(axis=1)
+    exp_val = np.where(exp_found, wv[np.arange(Q), hit.argmax(axis=1)], 0)
+    assert np.array_equal(f, exp_found)
+    assert np.array_equal(got, exp_val)
+
+
+def test_probe64_half_collisions_do_not_hit():
+    """Keys agreeing in one 32-bit half only must not match."""
+    from repro.kernels.probe import probe64, split64
+    q = np.asarray([(5 << 32) | 9], np.int64)
+    wk = np.asarray([[(5 << 32) | 8, (4 << 32) | 9, 0, 0, 0, 0, 0, 0]],
+                    np.int64)
+    wv = np.full_like(wk, 77)
+    qlo, qhi = split64(q)
+    klo, khi = split64(wk)
+    vlo, vhi = split64(wv)
+    f, _, _ = probe64(*map(jnp.asarray, (qlo, qhi, klo, khi, vlo, vhi)))
+    assert not bool(np.asarray(f)[0])
+
+
+# ----------------------------------------------------------------------
+# art probe (batched radix descent)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_keys,key_bits", [(300, 60), (200, 16), (50, 8)])
+def test_art_descend_matches_ref_and_scalar(n_keys, key_bits):
+    """Kernel vs pure-numpy ref vs the authoritative scalar reader,
+    over trees with short keys (dense top bytes) and long random keys
+    (deep descents + path compression)."""
+    from repro.core import PMem, PART
+    from repro.kernels.art_probe import batched_lookup, descend_ref
+    art = PART(PMem())
+    keys = list(dict.fromkeys(
+        int(k) for k in RNG.integers(1, 1 << key_bits, size=n_keys)))
+    for k in keys:
+        art.insert(k, (k % 1000003) + 1)
+    for k in keys[::5]:
+        art.delete(k)  # tombstoned leaves must read as misses
+    arrays = art.export_arrays()
+    queries = np.asarray(
+        keys + [int(k) for k in RNG.integers(1, 1 << key_bits, size=100)],
+        np.int64)
+    found, vals = batched_lookup(queries, arrays)
+    rf, rv = descend_ref(queries, arrays)
+    assert np.array_equal(found, rf)
+    assert np.array_equal(vals, np.where(rf, rv, 0))
+    for q, f, v in zip(queries, found, vals):
+        ref = art.lookup(int(q))
+        assert (ref is not None) == bool(f), int(q)
+        if ref is not None:
+            assert ref == int(v)
 
 
 # ----------------------------------------------------------------------

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PART, PCLHT, PHOT, PMasstree, PMem, CrashPoint
@@ -97,6 +102,26 @@ def test_single_crash_point_never_loses_acked_keys(ops, seed, data):
         for kk, vv in acked.items():
             if kk != crashed_key:
                 assert idx.lookup(kk) == vv
+
+
+@settings(max_examples=10, deadline=None)
+@given(op_sequences(), st.booleans())
+def test_batched_lookup_bit_identical_property(ops, crash):
+    """The batched execution layer: after ANY op sequence (and an
+    optional powerfail), lookup_batch over every touched key returns
+    exactly what scalar lookup does — for both kernel-backed indexes."""
+    probe = sorted({k for _, k, _ in ops})
+    for factory in (lambda p: PCLHT(p, n_buckets=4), lambda p: PART(p)):
+        pmem = PMem()
+        idx = factory(pmem)
+        for kind, k, v in ops:
+            (idx.insert(k, v) if kind == "insert" else idx.delete(k))
+        if crash:
+            pmem.crash(mode="powerfail")
+            idx.recover()
+        scalar = [idx.lookup(k) for k in probe]
+        assert idx.lookup_batch(probe, force_kernel=True) == scalar
+        assert idx.lookup_batch(probe) == scalar  # adaptive path too
 
 
 @settings(max_examples=100, deadline=None)

@@ -46,14 +46,15 @@ def test_scan_correction_matches_unrolled():
             x = body(x, ws[i])
         return x.sum()
 
+    norm = roofline.normalize_cost_analysis
     ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
     x = jax.ShapeDtypeStruct((B, D), jnp.float32)
-    c_scan = jax.jit(scanned).lower(ws, x).compile().cost_analysis()
-    c_unroll = jax.jit(unrolled).lower(ws, x).compile().cost_analysis()
+    c_scan = norm(jax.jit(scanned).lower(ws, x).compile().cost_analysis())
+    c_unroll = norm(jax.jit(unrolled).lower(ws, x).compile().cost_analysis())
 
     one = jax.ShapeDtypeStruct((D, D), jnp.float32)
-    c_body = jax.jit(lambda w, x: body(x, w)).lower(one, x) \
-        .compile().cost_analysis()
+    c_body = norm(jax.jit(lambda w, x: body(x, w)).lower(one, x)
+                  .compile().cost_analysis())
 
     corrected = c_scan["flops"] + (L - 1) * c_body["flops"]
     assert abs(corrected - c_unroll["flops"]) / c_unroll["flops"] < 0.05, \
