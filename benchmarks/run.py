@@ -14,10 +14,23 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
 from . import counters, crash_recovery, loc_report, roofline_report, ycsb
+
+
+def _git_commit():
+    """Current commit hash, or None outside a git checkout — used to
+    keep the --json trajectory at one row per commit."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+    except OSError:
+        return None
+    return out.stdout.strip() if out.returncode == 0 else None
 
 
 def main() -> None:
@@ -75,6 +88,7 @@ def main() -> None:
     if args.json:
         record = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "commit": _git_commit(),
             "quick": bool(args.quick),
             "n_load": n_load,
             "n_run": n_run,
@@ -90,6 +104,16 @@ def main() -> None:
             except ValueError:
                 print(f"warning: {args.json} held invalid JSON; restarting "
                       "the trajectory")
+        # one trajectory row per commit: a re-run (or a partial --only
+        # run) replaces its own entry instead of appending a duplicate
+        if record["commit"] is not None:
+            dropped = len(history)
+            history = [r for r in history
+                       if r.get("commit") != record["commit"]]
+            dropped -= len(history)
+            if dropped:
+                print(f"replacing {dropped} earlier run(s) of commit "
+                      f"{record['commit'][:12]}")
         history.append(record)
         with open(args.json, "w") as f:
             json.dump(history, f, indent=1)

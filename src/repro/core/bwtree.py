@@ -32,6 +32,8 @@ from __future__ import annotations
 
 from typing import Iterator, List, Optional, Tuple
 
+import numpy as np
+
 from .arena import Arena
 from .conditions import Condition, ConversionSpec, RecipeIndex, register
 from .pmem import NULL, PMem
@@ -318,11 +320,13 @@ class PBwTree(RecipeIndex):
         return records.get(key)
 
     def insert(self, key: int, value: int) -> bool:
+        self._bump_epoch()  # batched readers must re-snapshot
         return self._upsert(D_INSERT, key, value)
 
     def delete(self, key: int) -> bool:
         if self.lookup(key) is None:
             return False
+        self._bump_epoch()
         return self._upsert(D_DELETE, key, 0)
 
     def _upsert(self, dtype: int, key: int, value: int) -> bool:
@@ -476,6 +480,60 @@ class PBwTree(RecipeIndex):
                 break
             pid = right_pid
         return out
+
+    def scan(self, start_key: int, count: int) -> List[Tuple[int, int]]:
+        """Descend to start_key's leaf and follow the side links,
+        replaying each delta chain once."""
+        out: List[Tuple[int, int]] = []
+        pid = self._descend(start_key, help_along=False)[-1]
+        while pid != NULL and len(out) < count:
+            records, right_pid, _ = self._replay_leaf(self._head(pid))
+            for k in sorted(records):
+                if k >= start_key:
+                    out.append((k, records[k]))
+                    if len(out) >= count:
+                        break
+            pid = right_pid
+        return out
+
+    # ------------------------------------------------------------------
+    # data-plane export: the sorted leaf run for the shared scan kernel
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Optional[dict]:
+        """Page-major flattening of the leaf level with every delta
+        chain folded in: one sorted run of live (key, value) pairs,
+        probed by kernels/scan.  ``items`` honors SPLIT-delta key-range
+        truncation, so the run matches what a scalar reader resolves —
+        including unfinished splits (Condition #2 states)."""
+        items = list(self.items())
+        self._n_entries_hint = len(items)
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        return {"keys": keys, "vals": vals}
+
+    _n_entries_hint = 0
+    _MIN_REBUILD_BATCH = 64
+
+    def _rebuild_floor(self) -> int:
+        """Scales with the last export's entry count: the export replays
+        every leaf chain once."""
+        return max(self._MIN_REBUILD_BATCH, self._n_entries_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """The shared sorted-run kernel path; bit-identical to scalar
+        ``lookup`` (see kernels/scan)."""
+        from ..kernels.scan import snapshot_lookup
+        if snapshot.arrays is None:  # empty tree
+            return None
+        return snapshot_lookup(snapshot, queries)
+
+    def _scan_export(self, snapshot):
+        """Range scans reuse the lookup export — same sorted run."""
+        if snapshot.arrays is None:
+            return None
+        return snapshot.arrays["keys"], snapshot.arrays["vals"]
 
     def check_invariants(self) -> None:
         ks = list(self.keys())

@@ -51,10 +51,10 @@ class IndexSnapshot:
 
     ``arrays`` is index-specific (see each ``export_arrays``); ``epoch``
     is the validity key the snapshot was built under.  A snapshot is a
-    *consistent point-in-time view*: batched lookups against it are
-    bit-identical to scalar lookups issued at export time.  It must
-    never be served across a write or a crash — ``RecipeIndex.snapshot``
-    enforces that by comparing epochs.
+    *consistent point-in-time view*: batched lookups and range scans
+    against it are bit-identical to scalar reads issued at export time.
+    It must never be served across a write or a crash —
+    ``RecipeIndex.snapshot`` enforces that by comparing epochs.
     """
 
     epoch: Tuple[int, int, int]
@@ -183,6 +183,94 @@ class RecipeIndex:
         found, vals = res
         return [v if f else None
                 for f, v in zip(found.tolist(), vals.tolist())]
+
+    # -- batched range scans (ordered indexes only) -----------------------
+    def scan(self, start_key: int, count: int) -> List[Tuple[int, int]]:
+        """Scalar range scan: the first ``count`` live entries with
+        key >= ``start_key``, ascending (YCSB-E's "scan N records from a
+        start key").  The default walks the index's sorted iteration
+        with an early exit; tree indexes override with a descend +
+        sibling walk."""
+        if not self.ORDERED:
+            raise NotImplementedError(f"{self.spec.name} is unordered")
+        if count <= 0:
+            return []
+        out: List[Tuple[int, int]] = []
+        for k, v in self.items():  # type: ignore[attr-defined]
+            if k >= start_key:
+                out.append((k, v))
+                if len(out) >= count:
+                    break
+        return out
+
+    def _scan_export(self, snapshot: IndexSnapshot
+                     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Sorted (keys, vals) int64 run of the live entries — the
+        page export the shared kernels/scan engine probes.  The default
+        materializes the index's sorted iteration; P-Masstree/P-BwTree
+        override to reuse their (already sorted) lookup export.  Called
+        at most once per epoch: kernels/scan memoizes the prepared form
+        on the snapshot."""
+        items = list(self.items())  # type: ignore[attr-defined]
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        return keys, vals
+
+    def _kernel_scan(self, snapshot: IndexSnapshot, starts: np.ndarray,
+                     counts: np.ndarray
+                     ) -> Optional[List[List[Tuple[int, int]]]]:
+        """Vectorized range scans of a snapshot, or None for an empty
+        structure.  Ordered indexes share one implementation: binary
+        search + window gather over the sorted run from _scan_export
+        (kernels/scan).  Unordered indexes raise so ``scan_batch``
+        stays on the scalar path (which raises in turn)."""
+        if not self.ORDERED:
+            raise NotImplementedError(f"{self.spec.name} is unordered")
+        from ..kernels.scan import snapshot_scan
+        return snapshot_scan(snapshot, starts, counts,
+                             lambda: self._scan_export(snapshot))
+
+    def scan_batch(self, start_keys: Sequence[int],
+                   counts: Sequence[int], *, force_kernel: bool = False
+                   ) -> List[List[Tuple[int, int]]]:
+        """Batched range scans; results are bit-identical to calling
+        ``scan`` once per (start_key, count).
+
+        Dispatch mirrors ``lookup_batch`` with one twist: the floors
+        compare against the *total records requested* (sum of counts),
+        the unit the export cost actually amortizes over — a 64-scan
+        batch probing 100 records each is kernel-worthy even though 64
+        lookups would not be.  The stale-snapshot floor is 4x the
+        lookup rebuild floor (on the order of the structure's live
+        entry count): the sorted-run export walks every live entry, so
+        a batch requesting fewer records than that is cheaper as
+        scalar descend-and-walk scans.  Epoch semantics are identical
+        to lookups: any write or crash invalidates the snapshot and
+        small stale batches fall back to the scalar path."""
+        counts = [int(c) for c in counts]
+        assert len(counts) == len(start_keys)
+        stale = (self._snapshot is None
+                 or self._snapshot.epoch != self._epoch_key())
+        floor = (4 * self._rebuild_floor() if stale
+                 else self._MIN_KERNEL_BATCH)
+        if sum(counts) < floor and not force_kernel:
+            return [self.scan(int(k), c)
+                    for k, c in zip(start_keys, counts)]
+        try:
+            res = self._kernel_scan(self.snapshot(),
+                                    np.asarray(start_keys, np.int64),
+                                    np.asarray(counts, np.int64))
+        except NotImplementedError:  # unordered / no sorted iteration
+            return [self.scan(int(k), c)
+                    for k, c in zip(start_keys, counts)]
+        except ImportError:  # jax-less environment: correct fallback
+            return [self.scan(int(k), c)
+                    for k, c in zip(start_keys, counts)]
+        if res is None:  # empty structure: every scan is empty
+            return [[] for _ in start_keys]
+        return res
 
     # -- recovery --------------------------------------------------------
     def recover(self) -> None:

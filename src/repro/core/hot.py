@@ -21,7 +21,9 @@ atomic pointer store, then flush + fence it (38 LOC in the paper).
 
 from __future__ import annotations
 
-from typing import Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from .arena import Arena
 from .conditions import Condition, ConversionSpec, RecipeIndex, register
@@ -187,6 +189,7 @@ class PHOT(RecipeIndex):
 
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL and value != NULL
+        self._bump_epoch()  # batched readers must re-snapshot
         a = self.arena
         while True:
             path = list(self._descend(key))
@@ -281,6 +284,10 @@ class PHOT(RecipeIndex):
                        else a.load(parent + 8 + pidx))
                 if cur != node:
                     continue
+                # invalidate batched readers only when the delete
+                # actually commits (no-op deletes leave the snapshot
+                # valid)
+                self._bump_epoch()
                 tomb = self.arena.alloc(LEAF_WORDS)
                 a.store(tomb, T_LEAF)
                 a.store(tomb + 1, key)
@@ -336,3 +343,73 @@ class PHOT(RecipeIndex):
 
     def gc(self) -> int:
         return self.arena.gc(self._walk)
+
+    # ------------------------------------------------------------------
+    # data-plane export: nibble node pages for the shared radix kernel
+    # ------------------------------------------------------------------
+    def _node_words(self, ptr: int, n: int) -> np.ndarray:
+        """Raw volatile-cache view of a node (allocations never straddle
+        segments).  Snapshot reads bypass the load counters: the export
+        IS the batched read, amortized over the whole epoch."""
+        seg, off = self.arena._locate(ptr)
+        return seg.cache[off:off + n]
+
+    def export_arrays(self) -> Optional[Dict[str, np.ndarray]]:
+        """Normalized node pages for the batched radix descent
+        (kernels/art_probe with 4-bit units).  Node 0 is the root; every
+        compound node carries its 16-wide child row and its nibble
+        position as ``level``; leaves carry the full 64-bit key/value
+        (tombstones keep value 0 and miss in the kernel's liveness
+        check, matching the scalar reader)."""
+        root = int(self.pmem.load(self.super, 0))
+        if root == NULL:
+            return None
+        order: List[int] = []
+        idx_of: Dict[int, int] = {}
+        queue = [root]
+        while queue:
+            ptr = queue.pop()
+            if ptr in idx_of:
+                continue
+            idx_of[ptr] = len(order)
+            order.append(ptr)
+            w = self._node_words(ptr, 8)
+            if int(w[0]) == T_NODE:
+                row = self._node_words(ptr, NODE_WORDS)[8:]
+                for c in row[row != NULL]:
+                    queue.append(int(c))
+        N = len(order)
+        children = np.full((N, 16), -1, np.int32)
+        level = np.zeros(N, np.int32)
+        is_leaf = np.zeros(N, np.uint8)
+        leaf_key = np.zeros(N, np.int64)
+        leaf_val = np.zeros(N, np.int64)
+        for ptr, i in idx_of.items():
+            w = self._node_words(ptr, 8)
+            if int(w[0]) == T_LEAF:
+                is_leaf[i] = 1
+                leaf_key[i] = w[1]
+                leaf_val[i] = w[2]
+                continue
+            level[i] = w[1]  # the node's nibble position
+            row = self._node_words(ptr, NODE_WORDS)[8:]
+            present = np.nonzero(row != NULL)[0]
+            children[i, present] = [idx_of[int(row[b])] for b in present]
+        self._n_nodes_hint = N
+        return {"children": children, "level": level, "is_leaf": is_leaf,
+                "leaf_key": leaf_key, "leaf_val": leaf_val, "unit_bits": 4}
+
+    _n_nodes_hint = 0
+    _MIN_REBUILD_BATCH = 64  # stale-snapshot floor for an unknown-size trie
+
+    def _rebuild_floor(self) -> int:
+        """Scales with the last export's node count, like P-ART."""
+        return max(self._MIN_REBUILD_BATCH, self._n_nodes_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """The Pallas radix-descent path over 4-bit units; bit-identical
+        to scalar ``lookup`` (see kernels/art_probe)."""
+        from ..kernels.art_probe import snapshot_lookup
+        if snapshot.arrays is None:  # empty trie
+            return None
+        return snapshot_lookup(snapshot, queries)

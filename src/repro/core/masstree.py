@@ -35,6 +35,8 @@ from __future__ import annotations
 
 from typing import Iterator, List, Optional, Tuple
 
+import numpy as np
+
 from .arena import Arena
 from .conditions import Condition, ConversionSpec, RecipeIndex, register
 from .pmem import NULL, PMem
@@ -174,6 +176,7 @@ class PMasstree(RecipeIndex):
     # ------------------------------------------------------------------
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL
+        self._bump_epoch()  # batched readers must re-snapshot
         a = self.arena
         while True:
             path = self._descend(key)
@@ -240,6 +243,10 @@ class PMasstree(RecipeIndex):
                     if a.load(leaf + K0 + s) == key:
                         if a.load(leaf + V0 + s) == NULL:
                             return False
+                        # invalidate batched readers only when the
+                        # delete actually commits (no-op deletes leave
+                        # the snapshot valid)
+                        self._bump_epoch()
                         slots.pop(i)
                         a.store(leaf + 1, perm_pack(slots))
                         a.persist(leaf + 1)
@@ -475,6 +482,63 @@ class PMasstree(RecipeIndex):
                 break
             node = a.load(node + 2)
         return out
+
+    def scan(self, start_key: int, count: int) -> List[Tuple[int, int]]:
+        """Descend to start_key's leaf and walk the B-link chain, with
+        the same duplicate-masking filters as ``items``."""
+        a = self.arena
+        out: List[Tuple[int, int]] = []
+        last = -1
+        node = self._descend(start_key)[-1]
+        while node != NULL and len(out) < count:
+            high = a.load(node + 3)
+            for k, v in self._entries(node):
+                if v != NULL and k >= start_key and k < high and k > last:
+                    out.append((k, v))
+                    last = k
+                    if len(out) >= count:
+                        break
+            node = a.load(node + 2)
+        return out
+
+    # ------------------------------------------------------------------
+    # data-plane export: the sorted leaf run for the shared scan kernel
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Optional[dict]:
+        """Page-major flattening of the leaf level: one sorted run of
+        live (key, value) pairs, probed by kernels/scan (binary-search
+        lookups and window-gather range scans).  ``items`` applies the
+        reader's duplicate masking, so the run reflects exactly what a
+        scalar reader can observe — including mid-split crash states."""
+        items = list(self.items())
+        self._n_entries_hint = len(items)
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        return {"keys": keys, "vals": vals}
+
+    _n_entries_hint = 0
+    _MIN_REBUILD_BATCH = 64
+
+    def _rebuild_floor(self) -> int:
+        """Scales with the last export's entry count: the leaf walk
+        costs a couple of loads per entry."""
+        return max(self._MIN_REBUILD_BATCH, self._n_entries_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """The shared sorted-run kernel path; bit-identical to scalar
+        ``lookup`` (see kernels/scan)."""
+        from ..kernels.scan import snapshot_lookup
+        if snapshot.arrays is None:  # empty tree
+            return None
+        return snapshot_lookup(snapshot, queries)
+
+    def _scan_export(self, snapshot):
+        """Range scans reuse the lookup export — same sorted run."""
+        if snapshot.arrays is None:
+            return None
+        return snapshot.arrays["keys"], snapshot.arrays["vals"]
 
     def check_invariants(self) -> None:
         ks = list(self.keys())

@@ -23,6 +23,9 @@ WORKLOADS = {
     "B": dict(reads=0.95, inserts=0.05, scans=0.0),
     "C": dict(reads=1.0, inserts=0.0, scans=0.0),
     "E": dict(reads=0.0, inserts=0.05, scans=0.95),
+    # E0 is to E what C is to B: the pure-scan variant that isolates the
+    # steady-state batched scan path (no epoch churn from inserts)
+    "E0": dict(reads=0.0, inserts=0.0, scans=1.0),
 }
 
 SCAN_MAX = 100  # YCSB-E scans up to 100 records
@@ -87,11 +90,17 @@ class PhaseExecutor:
     """Executes a workload phase against an index.
 
     The batched mode coalesces *consecutive* lookups into one
-    ``lookup_batch`` dispatch (the paper's read-dominant YCSB-B/C mixes
-    are exactly long lookup runs), flushing whenever a write or scan
-    arrives so the observable op order — and therefore every result —
-    matches the scalar execution exactly.  Op counts and found counts
-    are preserved either way.
+    ``lookup_batch`` dispatch and consecutive scans into one
+    ``scan_batch`` dispatch (the paper's read-dominant YCSB-B/C mixes
+    are long lookup runs; YCSB-E is a long scan run), flushing whenever
+    a write — or an op of the other read kind — arrives, so the
+    observable op order and therefore every result matches the scalar
+    execution exactly.  Op counts, found counts, and scanned-record
+    counts are preserved either way.
+
+    Scans execute as "first ``aux`` live records from ``key``"
+    (``index.scan``) — real YCSB-E semantics, identical on the scalar
+    and batched paths.
     """
 
     def __init__(self, index, *, batch_lookups: bool = False,
@@ -100,10 +109,11 @@ class PhaseExecutor:
         self.batch_lookups = batch_lookups
         self.max_batch = max_batch
         self.done = {"insert": 0, "lookup": 0, "scan": 0, "found": 0,
-                     "batches": 0}
+                     "scanned": 0, "batches": 0, "scan_batches": 0}
         self._pending: List[int] = []
+        self._pending_scans: List[Tuple[int, int]] = []
 
-    def _flush(self) -> None:
+    def _flush_lookups(self) -> None:
         if not self._pending:
             return
         results = self.index.lookup_batch(self._pending)
@@ -112,31 +122,52 @@ class PhaseExecutor:
         self.done["batches"] += 1
         self._pending.clear()
 
+    def _flush_scans(self) -> None:
+        if not self._pending_scans:
+            return
+        starts = [s for s, _ in self._pending_scans]
+        counts = [c for _, c in self._pending_scans]
+        results = self.index.scan_batch(starts, counts)
+        self.done["scan"] += len(starts)
+        self.done["scanned"] += sum(len(r) for r in results)
+        self.done["scan_batches"] += 1
+        self._pending_scans.clear()
+
+    def _flush(self) -> None:
+        self._flush_lookups()
+        self._flush_scans()
+
     def run(self, ops: Sequence[Op]) -> dict:
         done = self.done
         batching = self.batch_lookups
         pending, max_batch = self._pending, self.max_batch
-        append, flush = pending.append, self._flush
+        pending_scans = self._pending_scans
         index, lookup = self.index, self.index.lookup
         for kind, key, aux in ops:
             if kind == "lookup":
                 if batching:
-                    append(key)
+                    self._flush_scans()
+                    pending.append(key)
                     if len(pending) >= max_batch:
-                        flush()
+                        self._flush_lookups()
                 else:
                     if lookup(key) is not None:
                         done["found"] += 1
                     done["lookup"] += 1
             elif kind == "insert":
-                flush()
+                self._flush()
                 index.insert(key, aux)
                 done["insert"] += 1
             else:
-                flush()
-                index.range_query(key, key + (aux << 40))
-                done["scan"] += 1
-        flush()
+                if batching:
+                    self._flush_lookups()
+                    pending_scans.append((key, aux))
+                    if len(pending_scans) >= max_batch:
+                        self._flush_scans()
+                else:
+                    done["scanned"] += len(index.scan(key, aux))
+                    done["scan"] += 1
+        self._flush()
         return done
 
 
@@ -144,7 +175,8 @@ def run_workload(index, wl: Workload, *, phase: str = "run",
                  batch_lookups: bool = False, max_batch: int = 4096) -> dict:
     """Execute a phase; returns op counts (throughput measured by caller).
     With ``batch_lookups`` consecutive reads dispatch through the
-    index's ``lookup_batch`` (the Pallas probe path for P-CLHT/P-ART)."""
+    index's ``lookup_batch``/``scan_batch`` (the Pallas probe and scan
+    kernels, for all five converted indexes)."""
     ops = wl.load_ops if phase == "load" else wl.run_ops
     ex = PhaseExecutor(index, batch_lookups=batch_lookups,
                        max_batch=max_batch)

@@ -1,6 +1,6 @@
 from .kernel import art_descend
-from .ops import batched_lookup, key_bytes, snapshot_lookup
+from .ops import batched_lookup, key_bytes, key_units, snapshot_lookup
 from .ref import descend_ref
 
-__all__ = ["art_descend", "batched_lookup", "key_bytes", "snapshot_lookup",
-           "descend_ref"]
+__all__ = ["art_descend", "batched_lookup", "key_bytes", "key_units",
+           "snapshot_lookup", "descend_ref"]

@@ -1,17 +1,22 @@
-"""Batched P-ART radix descent — Pallas TPU kernel.
+"""Batched radix descent (P-ART and P-HOT) — Pallas TPU kernel.
 
-A tile of queries descends the exported node pages together: at each of
-the at-most-9 steps (8 key bytes + the final leaf), every lane gathers
-its current node's ``level`` word, picks the key byte at that level,
-and hops through the 256-wide child row.  Trusting ``level`` is exactly
-the scalar reader's stale-prefix tolerance (paper §6.4): a node whose
-prefix header was left stale by an interrupted path-compression SMO is
-traversed by level and the full 64-bit key is verified at the leaf, so
-batched results are bit-identical to scalar ``lookup`` even mid-SMO or
-post-crash.  Keys/values travel as (lo, hi) int32 halves.
+A tile of queries descends the exported node pages together: at each
+step, every lane gathers its current node's ``level`` word, picks the
+key *unit* at that level, and hops through the node's child row.  The
+unit width is set by the export: P-ART uses 8-bit units (qunits
+[Q, 8], children [N, 256], at most 9 steps), P-HOT's nibble-span
+compound nodes use 4-bit units (qunits [Q, 16], children [N, 16], at
+most 17 steps) — the kernel derives both from the array shapes.
 
-The node pages (children [N,256], level, leaf words) are broadcast to
-every grid step; queries are tiled.  Like the other kernels this runs
+Trusting ``level`` is exactly the scalar reader's stale-prefix
+tolerance (paper §6.4): a node whose prefix header was left stale by an
+interrupted path-compression SMO is traversed by level and the full
+64-bit key is verified at the leaf, so batched results are
+bit-identical to scalar ``lookup`` even mid-SMO or post-crash.
+Keys/values travel as (lo, hi) int32 halves.
+
+The node pages (children, level, leaf words) are broadcast to every
+grid step; queries are tiled.  Like the other kernels this runs
 interpret-mode by default (the gathers lower to dynamic-slice chains on
 real TPU backends; interpret executes them directly on CPU).
 """
@@ -43,15 +48,15 @@ def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
     lkhi = lkhi_ref[...][:, 0]
     lvlo = lvlo_ref[...][:, 0]
     lvhi = lvhi_ref[...][:, 0]
-    QB = qbytes.shape[0]
+    QB, U = qbytes.shape  # U key units per key (8 bytes or 16 nibbles)
     node = jnp.zeros((QB,), jnp.int32)  # node 0 is the root
     active = jnp.ones((QB,), jnp.bool_)
     found = jnp.zeros((QB,), jnp.bool_)
     olo = jnp.zeros((QB,), jnp.int32)
     ohi = jnp.zeros((QB,), jnp.int32)
-    # levels strictly increase along any path, so 8 internal hops + the
+    # levels strictly increase along any path, so U internal hops + the
     # leaf check bound the descent; finished lanes just idle
-    for _ in range(KEY_BYTES + 1):
+    for _ in range(U + 1):
         leaf = is_leaf[node] != 0
         # leaf verification: full 64-bit key AND live (non-tombstone) value
         hit = (active & leaf & (lklo[node] == qlo) & (lkhi[node] == qhi)
@@ -60,7 +65,7 @@ def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
         olo = jnp.where(hit, lvlo[node], olo)
         ohi = jnp.where(hit, lvhi[node], ohi)
         active = active & ~leaf
-        lvl = jnp.clip(level[node], 0, KEY_BYTES - 1)
+        lvl = jnp.clip(level[node], 0, U - 1)
         byte = jnp.take_along_axis(qbytes, lvl[:, None], axis=1)[:, 0]
         child = children[node, byte]
         active = active & (child >= 0)
@@ -74,12 +79,13 @@ def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
 def art_descend(qbytes, qlo, qhi, children, level, is_leaf,
                 lklo, lkhi, lvlo, lvhi, *,
                 query_block: int = QUERY_BLOCK, interpret: bool = True):
-    """qbytes: [Q, 8] int32 big-endian key bytes; qlo/qhi: [Q] int32 key
-    halves; children: [N, 256] int32 (-1 none); level/is_leaf/leaf
-    key-value halves: [N] int32.  Returns (found [Q] bool, value_lo,
-    value_hi [Q] int32)."""
-    Q = qbytes.shape[0]
-    N = children.shape[0]
+    """qbytes: [Q, U] int32 big-endian key units (U=8 bytes for P-ART,
+    U=16 nibbles for P-HOT); qlo/qhi: [Q] int32 key halves; children:
+    [N, 2**unit_bits] int32 (-1 none); level/is_leaf/leaf key-value
+    halves: [N] int32.  Returns (found [Q] bool, value_lo, value_hi
+    [Q] int32)."""
+    Q, U = qbytes.shape
+    N, fan = children.shape
     qb = min(query_block, Q)
     assert Q % qb == 0, (Q, qb)
     grid = (Q // qb,)
@@ -89,8 +95,8 @@ def art_descend(qbytes, qlo, qhi, children, level, is_leaf,
     found, olo, ohi = pl.pallas_call(
         _descend_kernel,
         grid=grid,
-        in_specs=[qtile(KEY_BYTES), qtile(1), qtile(1),
-                  bcast(256), bcast(1), bcast(1),
+        in_specs=[qtile(U), qtile(1), qtile(1),
+                  bcast(fan), bcast(1), bcast(1),
                   bcast(1), bcast(1), bcast(1), bcast(1)],
         out_specs=[qtile(1), qtile(1), qtile(1)],
         out_shape=[

@@ -1,8 +1,9 @@
-"""Host wrapper: PART.export_arrays dict -> art_descend kernel call.
+"""Host wrapper: radix node-page exports -> art_descend kernel calls.
 
 Splits 64-bit leaf words into int32 halves, extracts big-endian key
-bytes, pads the query batch to a whole number of kernel blocks, and
-recombines the halves of the result.
+units (8-bit bytes for P-ART, 4-bit nibbles for P-HOT — the export's
+``unit_bits`` field selects), pads the query batch to a whole number of
+kernel blocks, and recombines the halves of the result.
 """
 
 from __future__ import annotations
@@ -18,18 +19,28 @@ from .kernel import QUERY_BLOCK, art_descend
 KEY_BYTES = 8
 
 
+def key_units(keys: np.ndarray, unit_bits: int = 8) -> np.ndarray:
+    """[Q] int64 -> [Q, 64//unit_bits] int32 big-endian key units
+    (core.art.key_byte for unit_bits=8, core.hot.nibble for 4)."""
+    u = np.asarray(keys).astype(np.uint64)
+    n_units = 64 // unit_bits
+    shifts = np.uint64(unit_bits) * np.arange(n_units - 1, -1, -1,
+                                              dtype=np.uint64)
+    mask = np.uint64((1 << unit_bits) - 1)
+    return ((u[:, None] >> shifts[None, :]) & mask).astype(np.int32)
+
+
 def key_bytes(keys: np.ndarray) -> np.ndarray:
     """[Q] int64 -> [Q, 8] int32 big-endian bytes (core.art.key_byte)."""
-    u = np.asarray(keys).astype(np.uint64)
-    shifts = np.uint64(8) * np.arange(KEY_BYTES - 1, -1, -1, dtype=np.uint64)
-    return ((u[:, None] >> shifts[None, :]) & np.uint64(0xFF)).astype(np.int32)
+    return key_units(keys, 8)
 
 
 def _prepare(arrays: Dict[str, np.ndarray]) -> tuple:
     """Device-ready node pages: split leaf words, convert once."""
     lklo, lkhi = split64(arrays["leaf_key"])
     lvlo, lvhi = split64(arrays["leaf_val"])
-    return (jnp.asarray(arrays["children"]),
+    return (int(arrays.get("unit_bits", 8)),
+            jnp.asarray(arrays["children"]),
             jnp.asarray(arrays["level"], jnp.int32),
             jnp.asarray(arrays["is_leaf"], jnp.int32),
             jnp.asarray(lklo), jnp.asarray(lkhi),
@@ -38,6 +49,7 @@ def _prepare(arrays: Dict[str, np.ndarray]) -> tuple:
 
 def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
              ) -> Tuple[np.ndarray, np.ndarray]:
+    unit_bits, *node_pages = pages
     q = np.asarray(queries, np.int64)
     Q = q.shape[0]
     pad = pad_queries(Q)
@@ -46,8 +58,8 @@ def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
     qb = min(QUERY_BLOCK, q.shape[0])
     qlo, qhi = split64(q)
     found, olo, ohi = art_descend(
-        jnp.asarray(key_bytes(q)), jnp.asarray(qlo), jnp.asarray(qhi),
-        *pages, query_block=qb, interpret=interpret)
+        jnp.asarray(key_units(q, unit_bits)), jnp.asarray(qlo),
+        jnp.asarray(qhi), *node_pages, query_block=qb, interpret=interpret)
     found = np.asarray(found)[:Q]
     values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
     return found, np.where(found, values, 0)
@@ -55,16 +67,16 @@ def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
 
 def batched_lookup(queries: np.ndarray, arrays: Dict[str, np.ndarray], *,
                    interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
-    """queries: [Q] int64; arrays: PART.export_arrays output.
-    Returns (found [Q] bool, values [Q] int64), bit-identical to scalar
-    ``PART.lookup`` against the same snapshot."""
+    """queries: [Q] int64; arrays: PART/PHOT export_arrays output.
+    Returns (found [Q] bool, values [Q] int64), bit-identical to the
+    scalar ``lookup`` against the same snapshot."""
     return _descend(queries, _prepare(arrays), interpret=interpret)
 
 
 def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """Batched lookup against an ``IndexSnapshot`` of PART node pages;
-    the split + device conversion is memoized on the snapshot."""
+    """Batched lookup against an ``IndexSnapshot`` of PART or PHOT node
+    pages; the split + device conversion is memoized on the snapshot."""
     pages = snap.cache.get("art_probe")
     if pages is None:
         pages = _prepare(snap.arrays)

@@ -1,4 +1,4 @@
-"""Pure-numpy oracle for the batched ART radix descent."""
+"""Pure-numpy oracle for the batched radix descent (ART and HOT)."""
 
 from __future__ import annotations
 
@@ -12,25 +12,28 @@ KEY_BYTES = 8
 def descend_ref(queries: np.ndarray, arrays: Dict[str, np.ndarray]
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Same descent as kernel.py, scalar per query: trust ``level``,
-    hop the 256-wide child rows, verify the full key at the leaf."""
+    hop the child rows by key unit, verify the full key at the leaf."""
     children = arrays["children"]
     level = arrays["level"]
     is_leaf = arrays["is_leaf"]
     leaf_key = arrays["leaf_key"]
     leaf_val = arrays["leaf_val"]
+    unit_bits = int(arrays.get("unit_bits", 8))
+    n_units = 64 // unit_bits
+    mask = (1 << unit_bits) - 1
     Q = len(queries)
     found = np.zeros(Q, bool)
     vals = np.zeros(Q, np.int64)
     for i, key in enumerate(np.asarray(queries, np.int64)):
         node = 0
-        for _ in range(KEY_BYTES + 1):
+        for _ in range(n_units + 1):
             if is_leaf[node]:
                 if leaf_key[node] == key and leaf_val[node] != 0:
                     found[i] = True
                     vals[i] = leaf_val[node]
                 break
-            byte = (int(key) >> (8 * (KEY_BYTES - 1 - int(level[node])))) & 0xFF
-            child = children[node, byte]
+            shift = unit_bits * (n_units - 1 - int(level[node]))
+            child = children[node, (int(key) >> shift) & mask]
             if child < 0:
                 break
             node = child

@@ -1,0 +1,32 @@
+"""Pure-numpy oracle for the batched sorted-run search."""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def lookup_ref(queries: np.ndarray, keys: np.ndarray, vals: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Binary-search point lookups over a sorted run — the semantics
+    scan_window + sorted_lookup must reproduce bit for bit."""
+    q = np.asarray(queries, np.int64)
+    idx = np.searchsorted(keys, q, side="left")
+    safe = np.clip(idx, 0, max(len(keys) - 1, 0))
+    found = (idx < len(keys)) & (len(keys) > 0)
+    found &= np.where(found, keys[safe] == q, False)
+    out = np.where(found, vals[safe] if len(keys) else 0, 0)
+    return found, out.astype(np.int64)
+
+
+def scan_ref(starts: np.ndarray, counts: np.ndarray, keys: np.ndarray,
+             vals: np.ndarray) -> List[List[Tuple[int, int]]]:
+    """Per query, the first counts[i] entries with key >= starts[i]."""
+    out = []
+    for s, c in zip(np.asarray(starts, np.int64),
+                    np.asarray(counts, np.int64)):
+        i = int(np.searchsorted(keys, s, side="left"))
+        j = min(i + int(c), len(keys))
+        out.append(list(zip(keys[i:j].tolist(), vals[i:j].tolist())))
+    return out

@@ -19,6 +19,9 @@ epoch-cached snapshot (kernels/clht_probe), and prefix matching probes
 all block hashes of a prompt in one P-ART descent (kernels/art_probe).
 The decode hot path issues zero scalar ``lookup`` calls — writes
 (grants, admissions) bump the index epoch and the next tick re-exports.
+Restart recovery ends with a prefix-range warmup: one batched
+``scan_batch`` sweep (kernels/scan) enumerates the surviving prefix
+cache and leaves its snapshot warm for the first admissions.
 
 The compute plane (decode attention over the pages) is
 kernels/paged_attention; this module is the control plane and a
@@ -153,10 +156,12 @@ class PagedKVManager:
             h = _roll_hash(h, blk)
             self.prefix.insert(h, page + 1)
 
-    def recover(self) -> None:
+    def recover(self) -> int:
         """Post-crash: locks were reinitialized by PMem.crash; the
         indexes need no repair (RECIPE).  Reconcile the bitmap against
-        the block table + prefix cache (leaked pages = crash garbage)."""
+        the block table + prefix cache (leaked pages = crash garbage),
+        then warm the prefix cache's read path.  Returns the number of
+        warm prefix blocks that survived."""
         live = set()
         for k, v in self.table.items():
             live.add(v - 1)
@@ -165,6 +170,22 @@ class PagedKVManager:
         for p in range(self.n_pages):
             if self.pmem.load(self.bitmap, p) == 1 and p not in live:
                 self.free_page(p)
+        return self.warm_prefixes()
+
+    def warm_prefixes(self, chunk: int = 256) -> int:
+        """Prefix-range warmup: sweep the surviving prefix cache with
+        batched range scans (kernels/scan over the P-ART's sorted
+        export), so the first admissions after a restart probe a warm
+        snapshot instead of paying the export on the prefill path.
+        Returns the number of warm prefix blocks found."""
+        total, start = 0, 1
+        while True:
+            rows = self.prefix.scan_batch([start], [chunk],
+                                          force_kernel=True)[0]
+            total += len(rows)
+            if len(rows) < chunk:
+                return total
+            start = rows[-1][0] + 1
 
 
 class Server:
@@ -187,7 +208,7 @@ class Server:
         self._next_rid = 0
         self.stats = {"prefill_tokens": 0, "prefix_hits": 0,
                       "decode_steps": 0, "page_translations": 0,
-                      "translation_batches": 0}
+                      "translation_batches": 0, "warm_prefixes_restored": 0}
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
         rid = self._next_rid
@@ -284,9 +305,11 @@ class Server:
         """Power-fail the metadata plane; RECIPE indexes come back with
         no repair pass, the bitmap is reconciled, compute caches (HBM)
         are gone — but the block/prefix metadata for committed pages
-        survives, so warm prefixes skip re-prefill."""
+        survives, so warm prefixes skip re-prefill.  Recovery ends with
+        a prefix-range warmup pass (one batched scan sweep) so the
+        first post-restart admissions probe a warm snapshot."""
         self.pmem.crash(mode="powerfail")
-        self.kv.recover()
+        self.stats["warm_prefixes_restored"] = self.kv.recover()
         self.caches.clear()
         self.running.clear()
         self.page_tables.clear()

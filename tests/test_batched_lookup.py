@@ -1,12 +1,14 @@
 """Batched execution layer: lookup_batch must be bit-identical to
-scalar lookup for P-CLHT and P-ART — on YCSB-B/C op streams, across
-epochs (inserts/deletes/resize invalidate snapshots), after powerfail
-crashes, and through the kernels' padding/windowing edge cases."""
+scalar lookup for all five converted indexes — on YCSB-B/C op streams,
+across epochs (inserts/deletes/resize invalidate snapshots), after
+powerfail crashes, and through the kernels' padding/windowing edge
+cases."""
 
 import numpy as np
 import pytest
 
-from repro.core import PMem, PCLHT, PART, IndexSnapshot
+from repro.core import (PMem, PCLHT, PART, PHOT, PBwTree, PMasstree,
+                        IndexSnapshot)
 from repro.core.ycsb import generate, run_workload
 
 RNG = np.random.default_rng(42)
@@ -16,7 +18,9 @@ def _mk_clht(pmem):
     return PCLHT(pmem, n_buckets=16)  # small: forces chains + rehash
 
 
-FACTORIES = [("P-CLHT", _mk_clht), ("P-ART", lambda p: PART(p))]
+FACTORIES = [("P-CLHT", _mk_clht), ("P-ART", lambda p: PART(p)),
+             ("P-Masstree", PMasstree), ("P-BwTree", PBwTree),
+             ("P-HOT", PHOT)]
 
 
 def _keys(n, hi=1 << 60):
@@ -125,26 +129,25 @@ def test_snapshot_epoch_invalidation_unit():
 
 def test_scalar_fallback_for_indexes_without_export():
     """Every RecipeIndex gets a correct lookup_batch via the base
-    scalar fallback, even with no export_arrays implementation."""
-    from repro.core import PBwTree
-    idx = PBwTree(PMem())
+    scalar fallback, even with no export_arrays implementation (the
+    hand-crafted baselines never grew one)."""
+    from repro.core.baselines import CCEH
+    idx = CCEH(PMem(), depth=4, fixed=True)
     keys = _keys(40)
     for k in keys:
         idx.insert(k, k % 1000 + 1)
     assert idx.lookup_batch(keys) == [idx.lookup(k) for k in keys]
+    assert idx.lookup_batch(keys, force_kernel=True) == \
+        [idx.lookup(k) for k in keys]
 
 
-def test_values_above_32_bits_roundtrip():
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_values_above_32_bits_roundtrip(name, factory):
     """The paired-half kernels must return >32-bit values exactly."""
-    idx = PCLHT(PMem(), n_buckets=8)
-    art = PART(PMem())
+    idx = factory(PMem())
     big = (1 << 61) + 12345678901
     for i, k in enumerate(_keys(64)):
         idx.insert(k, big + i)
-        art.insert(k, big + i)
     ks = list(idx.keys())
     assert idx.lookup_batch(ks, force_kernel=True) == \
         [idx.lookup(k) for k in ks]
-    ks2 = list(art.keys())
-    assert art.lookup_batch(ks2, force_kernel=True) == \
-        [art.lookup(k) for k in ks2]

@@ -1,0 +1,263 @@
+"""Batched range-scan path: scan_batch must be bit-identical to scalar
+scan for every ordered converted index — across epochs (deletes and
+SMOs invalidate snapshots), after powerfail crashes, mid-workload crash
+states (crash_testing.PMSnapshot restore + crash-after-each-store), and
+through the scan kernel's binary-search/window edge cases."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CrashPoint, PMem, PART, PHOT, PBwTree, PMasstree,
+                        PMSnapshot)
+from repro.core.ycsb import generate, run_workload
+
+RNG = np.random.default_rng(7)
+
+ORDERED_FACTORIES = [("P-ART", PART), ("P-Masstree", PMasstree),
+                     ("P-BwTree", PBwTree), ("P-HOT", PHOT)]
+# the three indexes PR 3 brought onto the snapshot protocol
+NEW_FACTORIES = [("P-Masstree", PMasstree), ("P-BwTree", PBwTree),
+                 ("P-HOT", PHOT)]
+
+
+def _keys(n, hi=1 << 60):
+    return list(dict.fromkeys(int(k) for k in RNG.integers(1, hi, size=n)))
+
+
+def _assert_scans_identical(idx, starts, counts):
+    scalar = [idx.scan(int(s), int(c)) for s, c in zip(starts, counts)]
+    batched = idx.scan_batch(starts, counts, force_kernel=True)
+    assert scalar == batched, [
+        (s, a, b) for s, a, b in zip(starts, scalar, batched) if a != b][:3]
+
+
+def _assert_lookups_identical(idx, probe):
+    scalar = [idx.lookup(int(k)) for k in probe]
+    batched = idx.lookup_batch(probe, force_kernel=True)
+    assert scalar == batched, [
+        (k, s, b) for k, s, b in zip(probe, scalar, batched) if s != b][:5]
+
+
+@pytest.mark.parametrize("name,factory", ORDERED_FACTORIES)
+def test_scan_batch_equals_scalar_uniform(name, factory):
+    idx = factory(PMem())
+    keys = _keys(400)
+    for k in keys:
+        idx.insert(k, (k % 1000003) + 1)
+    starts = keys[:30] + _keys(10) + [1, (1 << 62)]  # hits, misses, ends
+    counts = [int(c) for c in RNG.integers(1, 130, len(starts))]
+    counts[0] = 0  # empty window
+    _assert_scans_identical(idx, starts, counts)
+
+
+@pytest.mark.parametrize("name,factory", ORDERED_FACTORIES)
+def test_scan_batch_equals_scalar_after_deletes(name, factory):
+    idx = factory(PMem())
+    keys = _keys(300)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    for k in keys[::3]:
+        idx.delete(k)
+    starts = keys[::7]
+    _assert_scans_identical(idx, starts, [25] * len(starts))
+
+
+@pytest.mark.parametrize("name,factory", ORDERED_FACTORIES)
+def test_scan_batch_equals_scalar_post_crash(name, factory):
+    pmem = PMem()
+    idx = factory(pmem)
+    keys = _keys(300)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    idx.scan_batch(keys[:4], [20] * 4, force_kernel=True)  # pre-crash snapshot
+    pmem.crash(mode="powerfail")
+    # the stale pre-crash snapshot must not be served
+    starts = keys[::9] + _keys(10)
+    _assert_scans_identical(idx, starts, [33] * len(starts))
+    _assert_lookups_identical(idx, keys[:60] + _keys(30))
+
+
+@pytest.mark.parametrize("name,factory", NEW_FACTORIES)
+def test_batched_equals_scalar_mid_workload_crash(name, factory):
+    """Crash after each atomic store of an insert (the §5 targeted
+    strategy, via PMSnapshot restore), then verify the batched read
+    paths against scalar on the recovered image — stale pre-crash
+    snapshots must never leak through lookup_batch or scan_batch."""
+    pmem = PMem()
+    idx = factory(pmem)
+    keys = _keys(140)
+    for k in keys[:120]:
+        idx.insert(k, (k % 99991) + 1)
+    # build pre-crash snapshots on both kernel paths
+    idx.lookup_batch(keys[:64], force_kernel=True)
+    idx.scan_batch(keys[:4], [25] * 4, force_kernel=True)
+    snap = PMSnapshot(pmem, idx)
+    victim = keys[120]
+    before = pmem.counters.stores
+    idx.insert(victim, 777)
+    n_stores = pmem.counters.stores - before
+    snap.restore(pmem)
+    probe = keys[:40] + [victim] + _keys(10)
+    starts = keys[:121:24] + [victim]
+    counts = [17] * len(starts)
+    assert n_stores > 0
+    for k_at in range(0, n_stores, max(1, n_stores // 5)):
+        idx.lookup_batch(probe, force_kernel=True)  # re-arm a warm snapshot
+        pmem.arm_crash(after_stores=k_at)
+        try:
+            idx.insert(victim, 777)
+            pmem.disarm_crash()
+        except CrashPoint:
+            pass
+        pmem.crash(mode="powerfail")
+        idx.recover()
+        _assert_lookups_identical(idx, probe)
+        _assert_scans_identical(idx, starts, counts)
+        snap.restore(pmem)
+
+
+@pytest.mark.parametrize("name,factory", NEW_FACTORIES)
+def test_epoch_invalidation_on_delete_and_smo(name, factory):
+    """snapshot() memoizes per epoch; deletes and structure-modifying
+    insert bursts (node splits / CoW reorganizations) must invalidate
+    it so batched reads always reflect scalar state."""
+    idx = factory(PMem())
+    keys = _keys(260)
+    for k in keys:
+        idx.insert(k, (k % 1000003) + 1)
+    s1 = idx.snapshot()
+    assert idx.snapshot() is s1  # cached while clean
+    assert idx.lookup_batch([keys[0]], force_kernel=True) == \
+        [idx.lookup(keys[0])]
+    # delete invalidates
+    assert idx.delete(keys[0])
+    assert idx.snapshot() is not s1
+    assert idx.lookup_batch([keys[0]], force_kernel=True) == [None]
+    # an insert burst forces splits/reorganizations (FANOUT/LEAF_CAP are
+    # 15/16, so 200 inserts split many nodes); snapshots must track
+    s2 = idx.snapshot()
+    more = _keys(200)
+    for k in more:
+        idx.insert(k, (k % 4093) + 1)
+    assert idx.snapshot() is not s2
+    probe = keys[:80] + more[:80]
+    _assert_lookups_identical(idx, probe)
+    _assert_scans_identical(idx, probe[::10], [21] * len(probe[::10]))
+
+
+@pytest.mark.parametrize("wl_name", ["E", "E0"])
+@pytest.mark.parametrize("name,factory", [("P-Masstree", PMasstree),
+                                          ("P-BwTree", PBwTree)])
+def test_batched_ycsb_e_counts_match(name, factory, wl_name):
+    """run_workload's scan-coalescing executor preserves op counts and
+    scanned-record totals on YCSB-E (and its pure-scan E0 variant)."""
+    wl = generate(wl_name, 300, 200, seed=11)
+    scalar_idx = factory(PMem())
+    run_workload(scalar_idx, wl, phase="load")
+    scalar = run_workload(scalar_idx, wl, phase="run")
+    batched_idx = factory(PMem())
+    run_workload(batched_idx, wl, phase="load")
+    batched = run_workload(batched_idx, wl, phase="run", batch_lookups=True,
+                           max_batch=64)
+    assert scalar["scan"] == batched["scan"]
+    assert scalar["scanned"] == batched["scanned"]
+    assert scalar["insert"] == batched["insert"]
+    if wl_name == "E0":
+        assert batched["scan_batches"] > 0  # the kernel path actually ran
+
+
+def test_sorted_run_batches_above_kernel_block():
+    """Query batches larger than one kernel block (4096) must tile
+    cleanly through the sorted-run kernel's grid."""
+    idx = PMasstree(PMem())
+    keys = _keys(400)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    probe = (keys * 11)[:4300] + _keys(20)
+    assert idx.lookup_batch(probe, force_kernel=True) == \
+        [idx.lookup(k) for k in probe]
+    starts = (keys * 11)[:4200]
+    got = idx.scan_batch(starts, [2] * len(starts), force_kernel=True)
+    expect = {s: idx.scan(s, 2) for s in set(starts)}
+    assert got == [expect[s] for s in starts]
+
+
+def test_noop_delete_keeps_snapshot_valid():
+    """A delete of an absent key performs no stores and must not
+    invalidate the epoch snapshot (P-BwTree already short-circuits)."""
+    for cls in (PMasstree, PHOT):
+        idx = cls(PMem())
+        keys = _keys(120)
+        for k in keys:
+            idx.insert(k, 7)
+        s = idx.snapshot()
+        assert not idx.delete(999999999999)
+        assert idx.snapshot() is s, cls.__name__
+        assert idx.delete(keys[0])
+        assert idx.snapshot() is not s
+
+
+def test_scan_kernel_matches_ref():
+    """kernels/scan against its numpy oracle: biased-half ordering,
+    window masking, and out-of-range starts, including keys whose low
+    half exercises the unsigned-compare bias."""
+    from repro.kernels.scan import (lookup_ref, prepare_sorted, scan_ref,
+                                    sorted_lookup, sorted_scan)
+    keys = np.unique(RNG.integers(1, 1 << 62, size=500).astype(np.int64))
+    # force low halves with the high bit set (unsigned-compare trap)
+    keys[10:20] |= 0x80000000
+    keys = np.unique(keys)
+    vals = RNG.integers(1, 1 << 62, size=keys.shape[0]).astype(np.int64)
+    prepared = prepare_sorted(keys, vals)
+    queries = np.concatenate([keys[::5], RNG.integers(1, 1 << 62, 50),
+                              [1, int(keys[-1]) + 1]]).astype(np.int64)
+    found, got = sorted_lookup(queries, prepared)
+    rf, rv = lookup_ref(queries, keys, vals)
+    assert (found == rf).all()
+    assert (got == rv).all()
+    counts = RNG.integers(0, 140, size=queries.shape[0]).astype(np.int64)
+    assert sorted_scan(queries, counts, prepared) == \
+        scan_ref(queries, counts, keys, vals)
+
+
+def test_hot_export_matches_descend_ref():
+    """P-HOT's nibble-unit export drives the same kernel as P-ART:
+    check it against the radix-descent oracle directly."""
+    from repro.kernels.art_probe import descend_ref
+    idx = PHOT(PMem())
+    keys = _keys(200)
+    for k in keys:
+        idx.insert(k, (k % 99991) + 1)
+    for k in keys[::4]:
+        idx.delete(k)  # tombstone leaves must miss
+    arrays = idx.export_arrays()
+    assert arrays["unit_bits"] == 4
+    assert arrays["children"].shape[1] == 16
+    queries = np.asarray(keys + _keys(50), np.int64)
+    found, vals = descend_ref(queries, arrays)
+    scalar = [idx.lookup(int(k)) for k in queries]
+    got = [int(v) if f else None for f, v in zip(found, vals)]
+    assert got == scalar
+
+
+def test_prefix_warmup_after_restart():
+    """Serving: recover() ends with a prefix-range warmup sweep — the
+    count of surviving warm prefix blocks comes back and the prefix
+    cache answers from a warm snapshot."""
+    from repro.serving.engine import PagedKVManager
+    pmem = PMem()
+    kv = PagedKVManager(pmem, n_pages=64, page_size=4)
+    tokens = [int(t) for t in RNG.integers(1, 1000, size=32)]  # 8 blocks
+    pages = [kv.alloc_page() for _ in range(8)]
+    kv.prefix_insert(tokens, pages)
+    covered, _ = kv.prefix_lookup(tokens)
+    assert covered == 32
+    pmem.crash(mode="powerfail")
+    kv2 = PagedKVManager(pmem, n_pages=64, page_size=4)
+    assert kv2.recover() == 8  # all committed prefix blocks survive
+    covered2, pages2 = kv2.prefix_lookup(tokens)
+    assert covered2 == covered
+
+    # empty prefix cache: warmup reports zero and stays well-defined
+    kv3 = PagedKVManager(PMem(), n_pages=16, page_size=4)
+    assert kv3.warm_prefixes() == 0

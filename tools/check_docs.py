@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Docs link-checker — the CI docs job.
+
+Fails (exit 1) when:
+
+* a relative markdown link in docs/, EXPERIMENTS.md, or a kernel
+  package README resolves to a missing file;
+* a ``kernels/<name>`` reference in the checked documents names a
+  kernel package that does not exist under src/repro/kernels/
+  (dangling kernel-package references);
+* one of the four index kernel packages (probe, clht_probe,
+  art_probe, scan) is missing its README.md.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+KERNELS = ROOT / "src" / "repro" / "kernels"
+README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
+
+
+def doc_files():
+    docs = sorted((ROOT / "docs").glob("**/*.md"))
+    docs += [ROOT / "EXPERIMENTS.md"]
+    docs += sorted(KERNELS.glob("*/README.md"))
+    return [p for p in docs if p.exists()]
+
+
+def check_file(path: pathlib.Path, kernel_pkgs: set) -> list:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(ROOT)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1).strip()
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue
+        if not (path.parent / target).resolve().exists():
+            errors.append(f"{rel}: dangling link -> {m.group(1)}")
+    for m in KERNEL_REF_RE.finditer(text):
+        if m.group(1) not in kernel_pkgs:
+            errors.append(f"{rel}: dangling kernel-package reference -> "
+                          f"kernels/{m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    kernel_pkgs = {p.name for p in KERNELS.iterdir() if p.is_dir()}
+    errors = []
+    files = doc_files()
+    if not (ROOT / "docs" / "ARCHITECTURE.md").exists():
+        errors.append("docs/ARCHITECTURE.md is missing")
+    for name in README_REQUIRED:
+        if not (KERNELS / name / "README.md").exists():
+            errors.append(f"src/repro/kernels/{name}/README.md is missing")
+    for path in files:
+        errors.extend(check_file(path, kernel_pkgs))
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"checked {len(files)} docs, {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
