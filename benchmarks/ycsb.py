@@ -114,6 +114,76 @@ def bench_batched_scan(n_load: int, n_run: int, workloads=("E", "E0")):
     return rows
 
 
+def bench_batched_write(n_load: int, n_run: int, workloads=("A", "D", "F")):
+    """Scalar vs sharded batched write path on the write-heavy mixes:
+    YCSB-A (50/50 read/insert), D (95/5 read-latest/insert), F (50/50
+    read/read-modify-write).  The batched run coalesces writes into
+    ``write_batch`` (kernels/partition shard routing + one group-commit
+    persist epoch per shard run) and lets non-conflicting reads batch
+    across them; the scalar run applies every op one at a time.
+
+    Honesty checks built in: an untimed batched warm-up run (which also
+    absorbs kernel compilation) and the timed batched run must both
+    reproduce the scalar run's op results exactly; per-op clwb/fence
+    over the run phase are reported for both paths — group commit must
+    *amortize* persist traffic (batched ≤ scalar), never hide it."""
+    rows = []
+    targets = [("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
+               ("P-ART", PART), ("P-HOT", PHOT),
+               ("P-Masstree", PMasstree), ("P-BwTree", PBwTree)]
+    print(f"# batched write path — scalar vs write_batch, Kops/s "
+          f"({n_run} run ops)")
+    for name, factory in targets:
+        out = {}
+        for wl_name in workloads:
+            wl = generate(wl_name, n_load, n_run, seed=7)
+            n_ops = len(wl.run_ops)
+            # loads are untimed: run them batched on every copy
+            pm_s = PMem()
+            idx_s = factory(pm_s)
+            run_workload(idx_s, wl, phase="load", batch_lookups=True)
+            c0 = pm_s.counters.snapshot()
+            t0 = time.perf_counter()
+            scalar = run_workload(idx_s, wl, phase="run")
+            t_s = time.perf_counter() - t0
+            cs = pm_s.counters.delta(c0)
+            sig = ("found", "acked", "insert", "update", "delete", "lookup")
+            pm_w = PMem()
+            idx_w = factory(pm_w)
+            run_workload(idx_w, wl, phase="load", batch_lookups=True)
+            warm = run_workload(idx_w, wl, phase="run", batch_lookups=True)
+            assert all(warm[k] == scalar[k] for k in sig), \
+                "batched write path diverged from scalar results"
+            pm_b = PMem()
+            idx_b = factory(pm_b)
+            run_workload(idx_b, wl, phase="load", batch_lookups=True)
+            c0 = pm_b.counters.snapshot()
+            t0 = time.perf_counter()
+            batched = run_workload(idx_b, wl, phase="run",
+                                   batch_lookups=True)
+            t_b = time.perf_counter() - t0
+            cb = pm_b.counters.delta(c0)
+            assert all(batched[k] == scalar[k] for k in sig), \
+                "batched write path diverged from scalar results"
+            n_writes = max(scalar["insert"] + scalar["update"]
+                           + scalar["delete"], 1)
+            out[f"{wl_name}_scalar"] = n_ops / t_s / 1e3
+            out[f"{wl_name}_batched"] = n_ops / t_b / 1e3
+            out[f"{wl_name}_speedup"] = t_s / t_b
+            out[f"{wl_name}_clwb_scalar"] = cs.clwb / n_writes
+            out[f"{wl_name}_clwb_batched"] = cb.clwb / n_writes
+            out[f"{wl_name}_fence_scalar"] = cs.fence / n_writes
+            out[f"{wl_name}_fence_batched"] = cb.fence / n_writes
+        rows.append((f"ycsb_batched_write/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"{w}: {out[f'{w}_scalar']:7.1f} -> {out[f'{w}_batched']:8.1f} "
+            f"({out[f'{w}_speedup']:4.1f}x, clwb/op "
+            f"{out[f'{w}_clwb_scalar']:4.2f}->{out[f'{w}_clwb_batched']:4.2f}, "
+            f"fence/op {out[f'{w}_fence_scalar']:4.2f}->"
+            f"{out[f'{w}_fence_batched']:4.2f})" for w in workloads))
+    return rows
+
+
 def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
     """Scalar vs batched read path (the Pallas probe kernels) on the
     read-dominant mixes.  Same generated op stream, same index state;
@@ -181,6 +251,7 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
     if batched:
         rows.extend(bench_batched(n_load, n_run))
         rows.extend(bench_batched_scan(n_load, n_run))
+        rows.extend(bench_batched_write(n_load, n_run))
     return rows
 
 

@@ -77,9 +77,21 @@ class Arena:
         seg, off = self._locate(ptr)
         return self.pmem.load(seg, off)
 
+    def load_bulk(self, ptr: int, n_words: int):
+        """Vectorized node read (allocations never straddle segments);
+        counts n_words loads + touched lines like the scalar walk."""
+        seg, off = self._locate(ptr)
+        return self.pmem.load_bulk(seg, off, n_words)
+
     def store(self, ptr: int, value: int) -> None:
         seg, off = self._locate(ptr)
         self.pmem.store(seg, off, value)
+
+    def store_bulk(self, ptr: int, words) -> None:
+        """Vectorized multi-word store (CoW node blobs: unreachable
+        until a later commit store, so intra-blob order is free)."""
+        seg, off = self._locate(ptr)
+        self.pmem.store_bulk(seg, off, words)
 
     def cas(self, ptr: int, expected: int, new: int) -> bool:
         seg, off = self._locate(ptr)

@@ -67,9 +67,11 @@ SPEC = register(ConversionSpec(
 class PBwTree(RecipeIndex):
     ORDERED = True
     spec = SPEC
+    SHARD_SCHEME = "prefix"  # shards are key ranges: one leaf family
 
     def __init__(self, pmem: PMem, map_size: int = 1 << 14):
         super().__init__(pmem)
+        self._region_prefixes = ("bw.",)
         self.arena = Arena(pmem, "bw")
         # mapping table: one PM word per PID
         self.map = pmem.alloc("bw.map", map_size)
@@ -103,30 +105,34 @@ class PBwTree(RecipeIndex):
 
     def _new_leaf_base(self, keys: List[int], vals: List[int], *,
                        right_pid: int, high_key: int) -> int:
+        # one blob store: the base is unreachable garbage until the
+        # mapping-table CAS that publishes it, so intra-order is free
         a = self.arena
+        words = np.zeros(LEAF_WORDS, np.int64)
+        words[0] = N_LEAF
+        words[1] = len(keys)
+        words[2] = right_pid
+        words[3] = high_key
+        words[8:8 + len(keys)] = keys
+        words[8 + LEAF_CAP:8 + LEAF_CAP + len(vals)] = vals
         p = a.alloc(LEAF_WORDS)
-        a.store(p, N_LEAF)
-        a.store(p + 1, len(keys))
-        a.store(p + 2, right_pid)
-        a.store(p + 3, high_key)
-        for i, (k, v) in enumerate(zip(keys, vals)):
-            a.store(p + 8 + i, k)
-            a.store(p + 8 + LEAF_CAP + i, v)
+        a.store_bulk(p, words)
         a.flush_range(p, LEAF_WORDS)
         return p
 
     def _new_inner_base(self, keys: List[int], pids: List[int], *,
                         leftmost: int, right_pid: int, high_key: int) -> int:
         a = self.arena
+        words = np.zeros(INNER_WORDS, np.int64)
+        words[0] = N_INNER
+        words[1] = len(keys)
+        words[2] = right_pid
+        words[3] = high_key
+        words[4] = leftmost
+        words[8:8 + len(keys)] = keys
+        words[8 + INNER_CAP:8 + INNER_CAP + len(pids)] = pids
         p = a.alloc(INNER_WORDS)
-        a.store(p, N_INNER)
-        a.store(p + 1, len(keys))
-        a.store(p + 2, right_pid)
-        a.store(p + 3, high_key)
-        a.store(p + 4, leftmost)
-        for i, (k, c) in enumerate(zip(keys, pids)):
-            a.store(p + 8 + i, k)
-            a.store(p + 8 + INNER_CAP + i, c)
+        a.store_bulk(p, words)
         a.flush_range(p, INNER_WORDS)
         return p
 
@@ -329,7 +335,18 @@ class PBwTree(RecipeIndex):
         self._bump_epoch()
         return self._upsert(D_DELETE, key, 0)
 
-    def _upsert(self, dtype: int, key: int, value: int) -> bool:
+    def update(self, key: int, value: int) -> bool:
+        """Native update: a D_INSERT delta published by the usual
+        mapping-table CAS — chain replay makes the newest delta win, so
+        the delta *is* the update commit (an upsert: absent keys take
+        insert semantics).  Overwriting with the current value is a
+        no-op: no stores, snapshot epochs stay valid.  The one descent
+        and chain replay ``_upsert`` already does serve both the
+        current-value check and the commit."""
+        return self._upsert(D_INSERT, key, value, overwrite=True)
+
+    def _upsert(self, dtype: int, key: int, value: int,
+                overwrite: bool = False) -> bool:
         while True:
             path = self._descend(key, help_along=True)
             pid = path[-1]
@@ -338,7 +355,14 @@ class PBwTree(RecipeIndex):
             if key >= high_key:
                 continue  # a split landed between descend and read; retry
             if dtype == D_INSERT and key in records:
-                return False  # no updates via insert (YCSB semantics)
+                if not overwrite:
+                    return False  # no updates via insert (YCSB semantics)
+                if records[key] == value:
+                    return True  # no-op overwrite: no stores, no bump
+            if overwrite:
+                # update's writers bump here, only once mutation is
+                # certain (insert/delete bump at their entry)
+                self._bump_epoch()
             delta = self._new_delta(dtype, key, value, head)
             self.arena.fence()
             # non-SMO commit: single CAS on the mapping word; flush only
@@ -350,6 +374,118 @@ class PBwTree(RecipeIndex):
                 self._maybe_consolidate(pid)
                 return True
             # CAS failed → abort and restart from the root (paper §6.3)
+
+    # ------------------------------------------------------------------
+    # sharded batched writes (write_batch shard runs)
+    # ------------------------------------------------------------------
+    def _apply_shard_run(self, ops, positions, results) -> None:
+        """Consolidating group commit — the Bw-tree-native batch write.
+        The shard is a contiguous key range (prefix routing), so the
+        run sorted by key clusters into few leaves; each leaf's delta
+        chain is replayed ONCE, the whole group folds into the replayed
+        record set, and one copy-on-write consolidated base published
+        by the usual mapping-table CAS commits every op at once (the
+        scalar consolidation protocol, doing the work of a group of
+        delta prepends).  Groups that would overflow the leaf defer one
+        op to the scalar path (which splits), then resume; stable
+        sorting preserves same-key op history."""
+        order = sorted(positions, key=lambda p: ops[p][1])
+        i, n = 0, len(order)
+        while i < n:
+            key0 = int(ops[order[i]][1])
+            path = self._descend(key0, help_along=True)
+            pid = path[-1]
+            head = self._head(pid)
+            records, right_pid, high_key = self._replay_leaf(head)
+            if key0 >= high_key:
+                continue  # a split landed between descend and read
+            j = i
+            while j < n and int(ops[order[j]][1]) < high_key:
+                j += 1
+            group = order[i:j]
+            folded = dict(records)
+            staged: List[Tuple[int, bool]] = []
+            changed = False
+            overflow = False
+            for pos in group:
+                kind, key, value = ops[pos]
+                key, value = int(key), int(value)
+                if kind == "insert":
+                    if key in folded:
+                        staged.append((pos, False))
+                        continue
+                    if len(folded) >= LEAF_CAP:
+                        overflow = True
+                        break
+                    folded[key] = value
+                    changed = True
+                elif kind == "update":
+                    if folded.get(key) == value:
+                        staged.append((pos, True))  # no-op overwrite
+                        continue
+                    if key not in folded and len(folded) >= LEAF_CAP:
+                        overflow = True
+                        break
+                    folded[key] = value
+                    changed = True
+                else:  # delete
+                    if key not in folded:
+                        staged.append((pos, False))
+                        continue
+                    del folded[key]
+                    changed = True
+                staged.append((pos, True))
+            if changed and len(group) == 1:
+                # a singleton gains nothing from consolidation: post the
+                # one delta exactly as the scalar _upsert would
+                pos, r = staged[0]
+                kind, key, value = ops[pos]
+                key, value = int(key), int(value)
+                self._bump_epoch()
+                dtype = D_DELETE if kind == "delete" else D_INSERT
+                delta = self._new_delta(dtype, key,
+                                        value if dtype == D_INSERT else 0,
+                                        head)
+                self.arena.fence()
+                if not self.pmem.cas(self.map, pid, head, delta):
+                    continue  # raced; re-descend and retry
+                self.pmem.persist(self.map, pid)
+                if dtype == D_INSERT and len(records) + 1 > LEAF_CAP:
+                    self._split_leaf(path, pid)
+                self._maybe_consolidate(pid)
+                results[pos] = r
+                i += 1
+                continue
+            if changed and len(folded) > LEAF_CAP:
+                # oversized replay (a split is due): never truncate —
+                # run the first op scalar (delta + split), then retry
+                pos = order[i]
+                kind, key, value = ops[pos]
+                results[pos] = self._apply_write(kind, int(key), int(value))
+                i += 1
+                continue
+            if changed:
+                # one CoW consolidated base carries the whole group;
+                # the mapping CAS is the single commit point
+                self._bump_epoch()
+                items = sorted(folded.items())
+                node = self._new_leaf_base([k for k, _ in items],
+                                           [v for _, v in items],
+                                           right_pid=right_pid,
+                                           high_key=high_key)
+                self.arena.fence()
+                if not self.pmem.cas(self.map, pid, head, node):
+                    continue  # raced; re-descend and retry the group
+                self.pmem.persist(self.map, pid)
+            for pos, r in staged:
+                results[pos] = r
+            i += len(staged)
+            if overflow:
+                # the op that would overflow runs scalar (delta + split)
+                pos = order[i]
+                kind, key, value = ops[pos]
+                results[pos] = self._apply_write(kind, int(key), int(value))
+                i += 1
 
     # ------------------------------------------------------------------
     # consolidation + the 2-step split SMO

@@ -20,7 +20,7 @@ commit.  Common-case insert: 2 clwb + 2 fences (paper measures 1.5/2.5).
 
 from __future__ import annotations
 
-from typing import Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -60,6 +60,7 @@ class PCLHT(RecipeIndex):
         super().__init__(pmem)
         self.grow = grow
         self.name = name
+        self._region_prefixes = (f"{name}.",)
         existing = pmem.find(f"{name}.super")
         if existing is not None:
             self.super = existing  # attach (restart): no reinit needed
@@ -194,6 +195,39 @@ class PCLHT(RecipeIndex):
             off = self.pmem.load(t, off + 6)
         return None
 
+    def update(self, key: int, value: int) -> bool:
+        """Native update: probe the chain for the key and commit the new
+        value with a single 8-byte atomic store to the value word — the
+        CLHT atomic snapshot (key, value, key re-read) makes a torn
+        view impossible, so readers see the old or the new value.
+        Overwriting with the current value is a no-op that performs no
+        stores and leaves every snapshot epoch valid; absent keys fall
+        through to insert semantics."""
+        assert key != NULL
+        self.pmem.lock_shared(self.super, 0)
+        try:
+            t = self._table()
+            head = self._bucket_off(t, key)
+            self.pmem.lock(t, head)
+            try:
+                off = head
+                while off != NULL:
+                    for s in range(SLOTS):
+                        if self.pmem.load(t, off + s) == key:
+                            if self.pmem.load(t, off + SLOTS + s) == value:
+                                return True  # no-op overwrite
+                            self._bump_epoch()
+                            self.pmem.store(t, off + SLOTS + s, value)
+                            self.pmem.clwb(t, off + SLOTS + s)
+                            self.pmem.fence()
+                            return True
+                    off = self.pmem.load(t, off + 6)
+            finally:
+                self.pmem.unlock(t, head)
+        finally:
+            self.pmem.unlock_shared(self.super, 0)
+        return self.insert(key, value)
+
     def delete(self, key: int) -> bool:
         self._bump_epoch()
         self.pmem.lock_shared(self.super, 0)
@@ -217,6 +251,135 @@ class PCLHT(RecipeIndex):
                 self.pmem.unlock(t, head)
         finally:
             self.pmem.unlock_shared(self.super, 0)
+
+    # ------------------------------------------------------------------
+    # sharded batched writes (write_batch shard runs)
+    # ------------------------------------------------------------------
+    def _apply_shard_run(self, ops: Sequence[Tuple[str, int, int]],
+                         positions: Sequence[int], results: List) -> None:
+        """Vectorized shard-run fast path: one shared resize-lock
+        acquisition and one vectorized bucket hash for the whole run;
+        each op then walks its chain with bulk line loads (counted like
+        the scalar walk) and commits with the *exact* scalar store
+        protocol — value word first, then the single atomic key /
+        tombstone store, flushes riding the enclosing group-commit
+        epoch.  Ops needing an overflow link or a rehash defer to the
+        scalar path; epochs bump only on actual mutation."""
+        from ..kernels.partition import mix64_ref
+        pmem = self.pmem
+        rehash_after = False
+        i, n_ops = 0, len(positions)
+        # hash once per run: the bucket is hash % n, so only the cheap
+        # vectorized mod repeats when a deferral swapped the table
+        hashes = mix64_ref(np.fromiter((ops[p][1] for p in positions),
+                                       np.int64, n_ops))
+        while i < n_ops:
+            # fast section: hold the resize lock shared across the run;
+            # an op needing the scalar path (rehash) breaks out so the
+            # scalar op runs lock-free *in order* — same-key op history
+            # must be preserved
+            deferred = None
+            pmem.lock_shared(self.super, 0)
+            try:
+                t = self._table()
+                n = pmem.load(t, 0)
+                buckets = (hashes[i:] % np.uint64(n)).astype(np.int64)
+                for head_b in buckets.tolist():
+                    pos = positions[i]
+                    kind, key, value = ops[pos]
+                    head = HDR_WORDS + head_b * BUCKET_WORDS
+                    pmem.lock(t, head)
+                    try:
+                        r = self._run_one(t, head, kind, int(key),
+                                          int(value))
+                    finally:
+                        pmem.unlock(t, head)
+                    if r is None:
+                        deferred = pos
+                        break
+                    if r == "rehash_done_true":
+                        results[pos] = True
+                        rehash_after = True
+                    else:
+                        results[pos] = r
+                    i += 1
+            finally:
+                pmem.unlock_shared(self.super, 0)
+            if deferred is not None:
+                kind, key, value = ops[deferred]
+                results[deferred] = self._apply_write(kind, int(key),
+                                                      int(value))
+                i += 1
+        # the growth trigger fired during the run: rehash once at the
+        # end (rehash preserves the key→value mapping, so deferring it
+        # past the remaining ops cannot change any result)
+        if rehash_after and self.grow:
+            self._rehash()
+
+    def _run_one(self, t: Region, head: int, kind: str, key: int,
+                 value: int):
+        """One op against its (locked) bucket chain via bulk line loads.
+        Returns the op result, 'rehash_done_true' (inserted, chain long
+        enough to grow), or None to defer to the scalar path (rehash)."""
+        pmem = self.pmem
+        off, last, chain_len = head, head, 0
+        empty = None
+        while off != NULL:
+            w = pmem.load_bulk(t, off, BUCKET_WORDS).tolist()
+            last, chain_len = off, chain_len + 1
+            for s in range(SLOTS):
+                if w[s] == key:
+                    if kind == "insert":
+                        return False  # CLHT insert fails on existing key
+                    if kind == "delete":
+                        self._bump_epoch()
+                        pmem.store(t, off + s, NULL)  # atomic commit
+                        pmem.clwb(t, off + s)
+                        pmem.fence()
+                        return True
+                    # update: atomic value-word store (no-op elided)
+                    if w[SLOTS + s] == value:
+                        return True
+                    self._bump_epoch()
+                    pmem.store(t, off + SLOTS + s, value)
+                    pmem.clwb(t, off + SLOTS + s)
+                    pmem.fence()
+                    return True
+                if empty is None and w[s] == NULL:
+                    empty = (off, s)
+            off = w[6]
+        if kind == "delete":
+            return False  # absent: no store, no epoch bump
+        if empty is not None:
+            boff, s = empty
+            # the scalar commit protocol: value first, then the atomic key
+            self._bump_epoch()
+            pmem.store(t, boff + SLOTS + s, value)
+            pmem.clwb(t, boff + SLOTS + s)
+            pmem.fence()
+            pmem.store(t, boff + s, key)
+            pmem.clwb(t, boff + s)
+            pmem.fence()
+            if chain_len > MAX_CHAIN and self.grow:
+                return "rehash_done_true"
+            return True
+        # chain exhausted: link a fresh overflow bucket (the scalar
+        # protocol — bucket persisted, then one atomic chain-pointer
+        # store commits it)
+        new_off = self._alloc_overflow(t)
+        if new_off is None:
+            return None  # arena full: the scalar rehash path
+        self._bump_epoch()
+        pmem.store(t, new_off + SLOTS + 0, value)
+        pmem.store(t, new_off + 0, key)
+        pmem.flush_range(t, new_off, new_off + BUCKET_WORDS)
+        pmem.fence()
+        pmem.store(t, last + 6, new_off)  # commit: atomic chain pointer
+        pmem.clwb(t, last + 6)
+        pmem.fence()
+        if chain_len + 1 > MAX_CHAIN and self.grow:
+            return "rehash_done_true"
+        return True
 
     # ------------------------------------------------------------------
     # SMO: copy-on-write rehash, atomic table swap (Condition #1)

@@ -54,7 +54,11 @@ class IndexSnapshot:
     *consistent point-in-time view*: batched lookups and range scans
     against it are bit-identical to scalar reads issued at export time.
     It must never be served across a write or a crash —
-    ``RecipeIndex.snapshot`` enforces that by comparing epochs.
+    ``RecipeIndex.snapshot`` enforces that by comparing epochs, with one
+    refinement: ``shard_epochs`` records the per-shard write epochs at
+    export time, and point lookups whose keys route to shards untouched
+    since then may still be served (``_shard_refine``) — a sharded
+    ``write_batch`` invalidates only the shards it wrote.
     """
 
     epoch: Tuple[int, int, int]
@@ -62,6 +66,9 @@ class IndexSnapshot:
     # kernel front-ends stash per-epoch prepared forms here (e.g. the
     # pre-split int32 halves), so per-batch work is gather + kernel only
     cache: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # per-shard write epochs at export time (None until first export
+    # under the sharded write protocol)
+    shard_epochs: Optional[np.ndarray] = None
 
 
 class RecipeIndex:
@@ -87,18 +94,45 @@ class RecipeIndex:
     spec: ConversionSpec
     ORDERED = False
 
+    # -- sharded write path configuration ---------------------------------
+    N_WRITE_SHARDS = 16  # power of two; shard = top bits of the route
+    SHARD_SCHEME = "hash"  # ordered indexes route by key prefix instead
+
     def __init__(self, pmem: PMem):
         self.pmem = pmem
         self._epoch = 0
         self._snapshot: Optional[IndexSnapshot] = None
+        # per-shard write epochs: effective epoch of shard s is
+        # _shard_epochs[s] + _all_bump (the offset trick keeps scalar
+        # writers at one integer increment, and a plain list keeps the
+        # per-op scoped bump at Python-int cost)
+        self._shard_epochs = [0] * self.N_WRITE_SHARDS
+        self._all_bump = 0
+        self._shard_scope: Optional[int] = None  # write_batch targeting
+        # stores attributable to this index's own (shard-tracked)
+        # writes.  Indexes set _region_prefixes so the account covers
+        # exactly their named regions: stores to *other* structures on
+        # the same PMem (another index, an allocator bitmap) are not
+        # foreign writers; a second handle mutating this index's
+        # regions is, and poisons refinement.
+        self._region_prefixes: Tuple[str, ...] = ()
+        self._accounted_stores = pmem.counters.stores
+        self.shard_stats = {"refined_batches": 0, "refined_queries": 0}
 
     # -- the five-operation interface of §2.1 ---------------------------
     def insert(self, key: int, value: int) -> bool:
         raise NotImplementedError
 
     def update(self, key: int, value: int) -> bool:
-        # Several of the paper's indexes (CLHT, FAST&FAIR, CCEH) do not
-        # support updates; default maps to insert semantics.
+        """Set ``key``'s value.  Overwriting a key with its current value
+        is a no-op: nothing is written and no snapshot epoch is
+        invalidated (the write-path mirror of the no-op-delete rule).
+        The converted indexes override the changed-value case with their
+        native update commit; this default maps it to insert semantics
+        (several of the paper's baselines — FAST&FAIR, CCEH — do not
+        support updates)."""
+        if self.lookup(key) == value:
+            return True
         return self.insert(key, value)
 
     def lookup(self, key: int) -> Optional[int]:
@@ -119,9 +153,21 @@ class RecipeIndex:
 
     def _bump_epoch(self) -> None:
         """Writers call this on insert/delete/SMO so stale snapshots are
-        never served to batched readers."""
+        never served to batched readers.  Scalar writers (no shard
+        scope) conservatively invalidate every shard and drop the
+        memoized snapshot; inside ``write_batch`` only the scoped shard
+        is bumped and the snapshot object is kept — still never served
+        whole (the coarse epoch key has moved), but point lookups in
+        untouched shards may be refined against it."""
         self._epoch += 1
-        self._snapshot = None
+        if self._shard_scope is None:
+            self._all_bump += 1
+            self._snapshot = None
+        else:
+            self._shard_epochs[self._shard_scope] += 1
+
+    def _effective_shard_epochs(self) -> np.ndarray:
+        return np.asarray(self._shard_epochs, np.int64) + self._all_bump
 
     def export_arrays(self) -> Any:
         """Dense-array export of the reachable state for batched/Pallas
@@ -135,8 +181,125 @@ class RecipeIndex:
             arrays = self.export_arrays()
             # exporting may count loads but performs no stores, so the
             # key computed *before* the export is still the right one
-            self._snapshot = IndexSnapshot(epoch=key, arrays=arrays)
+            self._snapshot = IndexSnapshot(
+                epoch=key, arrays=arrays,
+                shard_epochs=self._effective_shard_epochs())
         return self._snapshot
+
+    # -- sharded batched write path (partition + group commit) ------------
+    def shard_route(self, keys: np.ndarray) -> np.ndarray:
+        """Shard id per key ([Q] int32) under this index's routing
+        scheme — kernels/partition, bit-identical to its Pallas form."""
+        from ..kernels.partition import route_shards
+        return route_shards(np.asarray(keys, np.int64),
+                            self.N_WRITE_SHARDS, self.SHARD_SCHEME)
+
+    def _write_account(self) -> int:
+        """Stores ever issued to this index's own regions (or the
+        global count when the index hasn't declared its regions)."""
+        prefixes = self._region_prefixes
+        if prefixes:
+            return sum(r.stores for r in self.pmem.regions.values()
+                       if r.name.startswith(prefixes))
+        return self.pmem.counters.stores
+
+    def _begin_writes(self) -> None:
+        """Foreign-writer gate: stores to this index's regions that did
+        not come through its shard-tracked writers cannot be attributed
+        to shards, so they invalidate every shard before the batch
+        starts."""
+        if self._write_account() != self._accounted_stores:
+            self._all_bump += 1
+
+    def _end_writes(self) -> None:
+        self._accounted_stores = self._write_account()
+
+    def _apply_write(self, kind: str, key: int, value: int):
+        if kind == "insert":
+            return self.insert(key, value)
+        if kind == "update":
+            return self.update(key, value)
+        if kind == "delete":
+            return self.delete(key)
+        raise ValueError(f"unknown write kind {kind!r}")
+
+    def _apply_shard_run(self, ops: Sequence[Tuple[str, int, int]],
+                         positions: Sequence[int], results: List) -> None:
+        """Apply one shard's run (in arrival order) and scatter results
+        back to batch positions.  Indexes with a vectorized shard-run
+        fast path override this; the default reuses the scalar ops —
+        identical commit protocols, identical results."""
+        for pos in positions:
+            kind, key, value = ops[pos]
+            results[pos] = self._apply_write(kind, int(key), int(value))
+
+    def write_batch(self, ops: Sequence[Tuple[str, int, int]], *,
+                    group_commit: bool = True) -> List:
+        """Apply a mixed batch of ``(kind, key, value)`` write ops
+        (kind in insert/update/delete; value ignored for deletes),
+        partitioned by shard.  Results are positionally identical to
+        applying the ops one at a time with ``insert``/``update``/
+        ``delete``: ops on the same key route to the same shard and
+        keep their arrival order (stable sort), and ops on different
+        keys commute — an op can only change the mapping at its own
+        key, and every SMO a run triggers preserves the mapping.
+
+        Each shard's run executes under one ``PMem.group_commit``
+        epoch: the run's clwb/fence traffic collapses to one writeback
+        per distinct dirtied line plus a single commit fence, and the
+        run's ops are acknowledged together when the epoch closes (a
+        crash mid-run loses only the un-acked group, never a fenced
+        prefix).  Snapshot invalidation is per shard: only the shards
+        a run actually wrote are bumped, so batched point lookups in
+        untouched shards keep serving the existing snapshot
+        (``_shard_refine``)."""
+        if not ops:
+            return []
+        from ..kernels.partition import partition_writes
+        keys = np.fromiter((op[1] for op in ops), np.int64, len(ops))
+        shards, order, offsets = partition_writes(
+            keys, self.N_WRITE_SHARDS, self.SHARD_SCHEME)
+        results: List = [None] * len(ops)
+        self._begin_writes()
+        prev_scope = self._shard_scope
+        try:
+            order = order.tolist()
+            for s in range(self.N_WRITE_SHARDS):
+                lo, hi = int(offsets[s]), int(offsets[s + 1])
+                if lo == hi:
+                    continue
+                self._shard_scope = s
+                if group_commit:
+                    with self.pmem.group_commit():
+                        self._apply_shard_run(ops, order[lo:hi], results)
+                else:
+                    self._apply_shard_run(ops, order[lo:hi], results)
+        finally:
+            self._shard_scope = prev_scope
+            self._end_writes()
+        return results
+
+    def _shard_refine(self, keys: np.ndarray) -> Optional[np.ndarray]:
+        """When the memoized snapshot is stale *only* because of this
+        index's own sharded writes, return the boolean mask of queries
+        whose shards are untouched since the export — those are
+        servable from the old snapshot (its arrays are immutable
+        copies, and a write can only change the mapping at its own
+        key, which routes to the written shard).  None when no
+        refinement applies: after a crash (the cache rolled back),
+        after foreign stores (unattributable), or when every shard
+        moved (scalar writers bump all)."""
+        snap = self._snapshot
+        if snap is None or snap.shard_epochs is None:
+            return None
+        if self.pmem.crashes != snap.epoch[2]:
+            return None
+        if self._write_account() != self._accounted_stores:
+            return None
+        clean = snap.shard_epochs == self._effective_shard_epochs()
+        if not clean.any():
+            return None
+        return clean[self.shard_route(keys)]
 
     _MIN_KERNEL_BATCH = 8  # below this, kernel dispatch overhead loses
     _MIN_REBUILD_BATCH = 512  # amortizes a snapshot re-export
@@ -168,6 +331,10 @@ class RecipeIndex:
         path.  Indexes without an array export always go scalar."""
         stale = (self._snapshot is None
                  or self._snapshot.epoch != self._epoch_key())
+        if stale and not force_kernel and len(keys):
+            refined = self._refined_lookup(np.asarray(keys, np.int64))
+            if refined is not None:
+                return refined
         floor = self._rebuild_floor() if stale else self._MIN_KERNEL_BATCH
         if len(keys) < floor and not force_kernel:
             return [self.lookup(int(k)) for k in keys]
@@ -183,6 +350,38 @@ class RecipeIndex:
         found, vals = res
         return [v if f else None
                 for f, v in zip(found.tolist(), vals.tolist())]
+
+    def _refined_lookup(self, keys: np.ndarray) -> Optional[List[Optional[int]]]:
+        """Serve a stale-snapshot batch by shard validity: queries in
+        untouched shards probe the existing snapshot's kernel path (no
+        re-export), the rest fall back to scalar lookups.  Returns None
+        when refinement does not apply or is not worth a kernel
+        dispatch — the caller then runs the usual stale-path logic.
+        Range scans are never refined: a scan window crosses shard
+        boundaries, so any dirty shard invalidates it."""
+        mask = self._shard_refine(keys)
+        if mask is None or int(mask.sum()) < self._MIN_KERNEL_BATCH:
+            return None
+        snap = self._snapshot
+        clean_idx = np.nonzero(mask)[0]
+        out: List[Optional[int]] = [None] * len(keys)
+        if snap.arrays is None:
+            res = None  # empty at export + untouched shard: still absent
+        else:
+            try:
+                res = self._kernel_lookup(snap, keys[clean_idx])
+            except (NotImplementedError, ImportError):
+                return None
+        if res is not None:
+            found, vals = res
+            for i, f, v in zip(clean_idx.tolist(), found.tolist(),
+                               vals.tolist()):
+                out[i] = v if f else None
+        for i in np.nonzero(~mask)[0].tolist():
+            out[i] = self.lookup(int(keys[i]))
+        self.shard_stats["refined_batches"] += 1
+        self.shard_stats["refined_queries"] += len(clean_idx)
+        return out
 
     # -- batched range scans (ordered indexes only) -----------------------
     def scan(self, start_key: int, count: int) -> List[Tuple[int, int]]:

@@ -163,15 +163,17 @@ def run_crash_sweep(
         if i in op_idx_set:
             snap = PMSnapshot(pmem, index)
             expect_before = dict(expect)
-            # dry-run to count this op's atomic stores
-            n_stores = pmem.counters.stores
+            # dry-run to count this op's crash points (one per atomic
+            # store; a store_bulk blob — unreachable until its commit
+            # store — is a single failure-atomic event)
+            n_stores = pmem.crash_calls
             try:
                 _apply(index, op)
             except Exception as e:  # pragma: no cover
                 report.stall_failures.append(f"op{i} {op}: dry-run raised {e!r}")
                 snap.restore(pmem)
                 continue
-            n_stores = pmem.counters.stores - n_stores
+            n_stores = pmem.crash_calls - n_stores
             report.max_stores_per_op = max(report.max_stores_per_op, n_stores)
             snap.restore(pmem)
             report.n_ops_tested += 1

@@ -60,9 +60,11 @@ def diverge_nibble(a: int, b: int) -> int:
 class PHOT(RecipeIndex):
     ORDERED = True
     spec = SPEC
+    SHARD_SCHEME = "prefix"  # shards are key ranges: one subtree family
 
     def __init__(self, pmem: PMem):
         super().__init__(pmem)
+        self._region_prefixes = ("hot.",)
         self.arena = Arena(pmem, "hot")
         self.super = pmem.alloc("hot.super", 8)  # word 0: root
         pmem.persist_region(self.super)
@@ -267,6 +269,27 @@ class PHOT(RecipeIndex):
             finally:
                 self._release(ins_parent)
 
+    def update(self, key: int, value: int) -> bool:
+        """Native update: CoW a fresh leaf carrying the new value and
+        commit it with the universal HOT single parent-pointer swap —
+        the same discipline as every other HOT write.  Overwriting with
+        the current value is a no-op (no stores, snapshot epochs stay
+        valid); absent keys fall through to insert."""
+        assert key != NULL and value != NULL
+        a = self.arena
+        while True:
+            path = list(self._descend(key))
+            parent, pidx, node = path[-1]
+            if node == NULL or node is None or a.load(node) != T_LEAF \
+                    or a.load(node + 1) != key or a.load(node + 2) == NULL:
+                return self.insert(key, value)
+            if a.load(node + 2) == value:
+                return True  # no-op overwrite
+            r = self._swap_leaf(parent, pidx, node, key, value)
+            if r is not None:
+                return r
+            # raced with a concurrent publish; re-descend and retry
+
     def delete(self, key: int) -> bool:
         """CoW tombstone: a fresh leaf with NULL value, committed by the
         same single pointer swap (subtree collapse is left to GC-time
@@ -296,6 +319,127 @@ class PHOT(RecipeIndex):
                 return True
             finally:
                 self._release(parent)
+
+    # ------------------------------------------------------------------
+    # sharded batched writes (write_batch shard runs)
+    # ------------------------------------------------------------------
+    def _apply_shard_run(self, ops, positions, results) -> None:
+        """Trie shard-run fast path: an iterative bulk-load descent
+        (one header read per level instead of a scalar load per word,
+        no generator plumbing) feeding the exact CoW + single
+        parent-pointer-swap commit helpers.  Uncommon shapes — empty
+        trie, tombstone revival, races — fall back to the full scalar
+        op, so results and commit protocols are identical."""
+        for pos in positions:
+            kind, key, value = ops[pos]
+            r = self._fast_write(kind, int(key), int(value))
+            if r is None:
+                r = self._apply_write(kind, int(key), int(value))
+            results[pos] = r
+
+    def _fast_write(self, kind: str, key: int, value: int) -> Optional[bool]:
+        a = self.arena
+        pmem = self.pmem
+        node = pmem.load(self.super, 0)
+        if node == NULL:
+            return None  # empty-trie root install: scalar path
+        parent, pidx = None, 0
+        path = []  # (parent, pidx, node, node_pos)
+        w = None
+        while True:
+            w = a.load_bulk(node, 8).tolist()
+            t = w[0]
+            npos = KEY_NIBBLES if t == T_LEAF else w[1]
+            path.append((parent, pidx, node, npos))
+            if t == T_LEAF:
+                break
+            idx = nibble(key, npos)
+            child = a.load(node + 8 + idx)
+            if child == NULL:
+                path.append((node, idx, NULL, -1))
+                break
+            parent, pidx, node = node, idx, child
+        parent, pidx, node, _ = path[-1]
+        if node != NULL:
+            old_key, old_val = w[1], w[2]  # the terminal leaf's header
+            if old_key == key:
+                if kind == "delete":
+                    if old_val == NULL:
+                        return False
+                    return self._swap_leaf(parent, pidx, node, key, NULL)
+                if kind == "update":
+                    if old_val == NULL:
+                        return None  # tombstone revival: insert path
+                    if old_val == value:
+                        return True  # no-op overwrite
+                    return self._swap_leaf(parent, pidx, node, key, value)
+                # insert: exists, or a tombstone the scalar path revives
+                return False if old_val != NULL else None
+            if kind == "delete":
+                return False
+            if kind == "update":
+                return None  # absent: insert semantics, scalar path
+        else:
+            if kind == "delete":
+                return False
+            if kind == "update":
+                return None
+            old_key = self._leftmost_key(parent)
+        # insert placement: branch at the divergence nibble (scalar
+        # algorithm over the already-collected path)
+        d = diverge_nibble(old_key, key)
+        ins = None
+        for p, pi, n, npos in path:
+            if n != NULL and npos > d:
+                ins = (p, pi, n)
+                break
+        if ins is None:
+            if node != NULL:
+                return None  # cannot happen with a leaf terminal; safety
+            self._acquire(parent)
+            try:
+                if a.load(parent + 8 + pidx) != NULL:
+                    return None  # raced: scalar retry path
+                self._bump_epoch()
+                leaf = self._new_leaf(key, value)
+                self._publish(parent, pidx, leaf, LEAF_WORDS)
+                return True
+            finally:
+                self._release(parent)
+        ins_parent, ins_idx, below = ins
+        self._acquire(ins_parent)
+        try:
+            cur = (pmem.load(self.super, 0) if ins_parent is None
+                   else a.load(ins_parent + 8 + ins_idx))
+            if cur != below:
+                return None  # raced: scalar retry path
+            self._bump_epoch()
+            leaf = self._new_leaf(key, value)
+            n = self._new_node(d, [(nibble(old_key, d), below),
+                                   (nibble(key, d), leaf)])
+            a.flush_range(leaf, LEAF_WORDS)
+            self._publish(ins_parent, ins_idx, n, NODE_WORDS)
+            return True
+        finally:
+            self._release(ins_parent)
+
+    def _swap_leaf(self, parent: Optional[int], pidx: int, node: int,
+                   key: int, value: int) -> Optional[bool]:
+        """Commit a value change (or tombstone, value NULL) by the
+        universal CoW-leaf + single parent-pointer swap."""
+        a = self.arena
+        self._acquire(parent)
+        try:
+            cur = (self.pmem.load(self.super, 0) if parent is None
+                   else a.load(parent + 8 + pidx))
+            if cur != node:
+                return None  # raced: scalar retry path
+            self._bump_epoch()
+            leaf = self._new_leaf(key, value)
+            self._publish(parent, pidx, leaf, LEAF_WORDS)
+            return True
+        finally:
+            self._release(parent)
 
     # ------------------------------------------------------------------
     # ordered iteration

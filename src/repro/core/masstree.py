@@ -87,9 +87,11 @@ def perm_slots(perm: int) -> List[int]:
 class PMasstree(RecipeIndex):
     ORDERED = True
     spec = SPEC
+    SHARD_SCHEME = "prefix"  # shards are key ranges: one leaf family
 
     def __init__(self, pmem: PMem):
         super().__init__(pmem)
+        self._region_prefixes = ("mass.",)
         self.arena = Arena(pmem, "mass")
         self.super = pmem.alloc("mass.super", 8)  # word 0: root ptr
         root = self._new_node(T_LEAF, high_key=INF)
@@ -127,6 +129,12 @@ class PMasstree(RecipeIndex):
         for s in perm_slots(perm):
             out.append((a.load(node + K0 + s), a.load(node + V0 + s)))
         return out
+
+    def _entries_bulk(self, node: int) -> List[Tuple[int, int]]:
+        """``_entries`` via one bulk node read — identical result; used
+        on the write/SMO paths where a whole node is consumed anyway."""
+        w = self.arena.load_bulk(node, NODE_WORDS).tolist()
+        return [(w[K0 + s], w[V0 + s]) for s in perm_slots(w[1])]
 
     def _free_slot(self, node: int) -> Optional[int]:
         used = set(perm_slots(self.arena.load(node + 1)))
@@ -227,6 +235,39 @@ class PMasstree(RecipeIndex):
                 return s
         raise KeyError(key)
 
+    def update(self, key: int, value: int) -> bool:
+        """Native update: one atomic store to the leaf's value slot —
+        the permutation word is untouched, so a reader's one-permutation
+        read sees the old or the new value, never a mix.  Overwriting
+        with the current value is a no-op (no stores, snapshot epochs
+        stay valid); absent keys fall through to insert."""
+        assert key != NULL
+        a = self.arena
+        while True:
+            path = self._descend(key)
+            leaf = path[-1]
+            a.lock(leaf)
+            retry = False
+            try:
+                if key >= a.load(leaf + 3) and a.load(leaf + 2) != NULL:
+                    retry = True  # split moved our range; re-descend
+                else:
+                    for s in perm_slots(a.load(leaf + 1)):
+                        if a.load(leaf + K0 + s) == key:
+                            v = a.load(leaf + V0 + s)
+                            if v == NULL:
+                                break  # tombstone: insert revives it
+                            if v == value:
+                                return True  # no-op overwrite
+                            self._bump_epoch()
+                            a.store(leaf + V0 + s, value)
+                            a.persist(leaf + V0 + s)
+                            return True
+            finally:
+                a.unlock(leaf)
+            if not retry:
+                return self.insert(key, value)
+
     def delete(self, key: int) -> bool:
         """Atomic permutation store dropping the entry (§6.5)."""
         a = self.arena
@@ -256,28 +297,184 @@ class PMasstree(RecipeIndex):
                 a.unlock(leaf)
 
     # ------------------------------------------------------------------
+    # sharded batched writes (write_batch shard runs)
+    # ------------------------------------------------------------------
+    def _apply_shard_run(self, ops, positions, results) -> None:
+        """Leaf-group commit: the shard is a contiguous key range
+        (prefix routing), so the run sorted by key clusters into few
+        leaves, and Masstree's permutation-word protocol is inherently
+        group-committable — a whole group of inserts/deletes against
+        one leaf becomes slot stores + ONE atomic permutation commit.
+        One descent and one lock acquisition serve the entire group.
+        Ops that need a split (leaf full) fall back to the scalar path
+        in order; sorting is stable, so same-key op history — the only
+        order that affects results — is preserved."""
+        a = self.arena
+        order = sorted(positions, key=lambda p: ops[p][1])
+        keys = [int(ops[p][1]) for p in order]
+        i, n = 0, len(order)
+        stall = 0
+        while i < n:
+            key0 = keys[i]
+            path = self._descend_bulk(key0)
+            leaf = path[-1]
+            a.lock(leaf)
+            consumed = 0
+            split_needed = False
+            try:
+                if key0 >= a.load(leaf + 3) and a.load(leaf + 2) != NULL:
+                    continue  # a split moved our range; re-descend
+                self._detect_and_fix_split(path, leaf)
+                high = a.load(leaf + 3)
+                j = i
+                while j < n and keys[j] < high:
+                    j += 1
+                consumed = self._leaf_group(leaf, order[i:j], ops, results)
+                if consumed == 0:
+                    # the next op needs a fresh slot in a full leaf:
+                    # split in place (we hold the lock and the path)
+                    # and retry the group against the halves
+                    if perm_count(a.load(leaf + 1)) >= FANOUT:
+                        self._split(path, leaf)
+                        split_needed = True
+            finally:
+                a.unlock(leaf)
+            i += consumed
+            if consumed == 0 and not split_needed:
+                stall += 1
+                if stall > 2:  # unexpected shape: the scalar op, in order
+                    pos = order[i]
+                    kind, key, value = ops[pos]
+                    results[pos] = self._apply_write(kind, int(key),
+                                                     int(value))
+                    i += 1
+                    stall = 0
+            else:
+                stall = 0
+
+    def _descend_bulk(self, key: int) -> List[int]:
+        """Root-to-leaf path via one bulk node read per level — the
+        batched-write twin of ``_descend`` (same B-link moves, loads
+        counted in bulk)."""
+        a = self.arena
+        path: List[int] = []
+        node = self.pmem.load(self.super, 0)
+        while True:
+            w = a.load_bulk(node, NODE_WORDS).tolist()
+            while key >= w[3] and w[2] != NULL:
+                node = w[2]
+                w = a.load_bulk(node, NODE_WORDS).tolist()
+            path.append(node)
+            if w[0] == T_LEAF:
+                return path
+            child = w[4]  # leftmost
+            for s in perm_slots(w[1]):
+                if key >= w[K0 + s]:
+                    child = w[V0 + s]
+                else:
+                    break
+            node = child
+
+    def _leaf_group(self, leaf: int, group: List[int], ops, results) -> int:
+        """Apply a run of ops that all target the (locked) ``leaf``.
+        Slot stores accumulate, then ONE atomic permutation store
+        commits every membership change at once; value overwrites and
+        tombstone revivals stay single atomic value-word stores, as in
+        the scalar protocol.  Slots freed by this group's deletes are
+        NOT recycled before the commit — the published permutation
+        still references them, and reusing one would tear the group's
+        atomicity.  Returns how many ops were consumed (0 = the first
+        op needs the scalar path)."""
+        a = self.arena
+        w = a.load_bulk(leaf, NODE_WORDS).tolist()
+        slots = perm_slots(w[1])
+        keys_sorted = [w[K0 + s] for s in slots]
+        slot_of = dict(zip(keys_sorted, slots))
+        cur_val = {s: w[V0 + s] for s in slots}
+        free = [s for s in range(FANOUT) if s not in slot_of.values()]
+        consumed = 0
+        perm_dirty = False
+        for pos in group:
+            kind, key, value = ops[pos]
+            key, value = int(key), int(value)
+            s = slot_of.get(key)
+            if kind == "delete":
+                if s is None or cur_val[s] == NULL:
+                    results[pos] = False
+                else:
+                    self._bump_epoch()
+                    keys_sorted.remove(key)
+                    del slot_of[key]
+                    # s stays referenced by the committed permutation:
+                    # not recyclable inside this group
+                    results[pos] = True
+                    perm_dirty = True
+            elif s is not None:
+                if kind == "insert" and cur_val[s] != NULL:
+                    results[pos] = False  # exists (no updates via insert)
+                elif kind == "update" and cur_val[s] == value:
+                    results[pos] = True  # no-op overwrite: no store
+                else:
+                    # live overwrite / tombstone revival: one atomic
+                    # value-word store (the scalar commit)
+                    self._bump_epoch()
+                    a.store(leaf + V0 + s, value)
+                    a.clwb(leaf + V0 + s)
+                    a.fence()
+                    cur_val[s] = value
+                    results[pos] = True
+            else:
+                if not free:
+                    break  # leaf full for new slots: scalar split path
+                s = free.pop()
+                self._bump_epoch()
+                a.store(leaf + K0 + s, key)
+                a.store(leaf + V0 + s, value)
+                a.clwb(leaf + K0 + s)
+                a.clwb(leaf + V0 + s)
+                pos_k = 0
+                while pos_k < len(keys_sorted) and keys_sorted[pos_k] < key:
+                    pos_k += 1
+                keys_sorted.insert(pos_k, key)
+                slot_of[key] = s
+                cur_val[s] = value
+                results[pos] = True
+                perm_dirty = True
+            consumed += 1
+        if perm_dirty:
+            # pairs durable before the commit point, then ONE atomic
+            # permutation store publishes the whole group
+            a.fence()
+            a.store(leaf + 1, perm_pack([slot_of[k] for k in keys_sorted]))
+            a.persist(leaf + 1)
+        return consumed
+
+    # ------------------------------------------------------------------
     # the SMO: 2-step atomic split + parent insert
     # ------------------------------------------------------------------
     def _split(self, path: List[int], node: int,
                held: frozenset = frozenset()) -> None:
         """Caller holds node's lock (and every lock in ``held``)."""
         a = self.arena
-        entries = self._entries(node)
+        entries = self._entries_bulk(node)
         mid = len(entries) // 2
         sep = entries[mid][0]
         ntype = a.load(node)
-        # s0: CoW sibling with the upper half (unreachable until s1)
-        sib = self._new_node(ntype, high_key=a.load(node + 3))
-        a.store(sib + 2, a.load(node + 2))
+        # s0: CoW sibling with the upper half, built as one blob store —
+        # unreachable until s1, so intra-blob store order is free
         upper = entries[mid:] if ntype == T_LEAF else entries[mid + 1:]
+        words = np.zeros(NODE_WORDS, np.int64)
+        words[0] = ntype
+        words[1] = perm_pack(list(range(len(upper))))
+        words[2] = a.load(node + 2)
+        words[3] = a.load(node + 3)
         if ntype == T_INNER:
-            a.store(sib + 4, entries[mid][1])  # leftmost child of sibling
-        slots = []
+            words[4] = entries[mid][1]  # leftmost child of sibling
         for i, (k, v) in enumerate(upper):
-            a.store(sib + K0 + i, k)
-            a.store(sib + V0 + i, v)
-            slots.append(i)
-        a.store(sib + 1, perm_pack(slots))
+            words[K0 + i] = k
+            words[V0 + i] = v
+        sib = a.alloc(NODE_WORDS)
+        a.store_bulk(sib, words)
         a.flush_range(sib, NODE_WORDS)
         a.fence()
         # s1 (atomic): link the sibling
@@ -357,7 +554,7 @@ class PMasstree(RecipeIndex):
                         a.lock(parent)
                     held = held | {parent}
                     moved = True
-                entries = self._entries(parent)
+                entries = self._entries_bulk(parent)
                 if any(v == sib for _, v in entries)                         or a.load(parent + 4) == sib:
                     return  # split already completed (helper beat us)
                 if len(entries) < FANOUT:
@@ -383,7 +580,7 @@ class PMasstree(RecipeIndex):
         if we_locked:
             a.lock(target)
         try:
-            entries = self._entries(target)
+            entries = self._entries_bulk(target)
             if any(v == sib for _, v in entries) or a.load(target + 4) == sib:
                 return
             if len(entries) < FANOUT:
@@ -409,7 +606,7 @@ class PMasstree(RecipeIndex):
         if sib == NULL:
             return
         high = a.load(leaf + 3)
-        sib_entries = self._entries(sib)
+        sib_entries = self._entries_bulk(sib)
         if not sib_entries:
             return
         # crash between s1 and s2 (leaf only): high key not yet truncated —
@@ -433,7 +630,7 @@ class PMasstree(RecipeIndex):
         # crash before s4: parent lacks the sibling — replay parent insert
         if len(path) >= 2:
             parent = path[-2]
-            if not any(v == sib for _, v in self._entries(parent)) \
+            if not any(v == sib for _, v in self._entries_bulk(parent)) \
                     and a.load(parent + 4) != sib:
                 self._insert_parent(path, leaf, a.load(leaf + 3), sib)
 

@@ -26,6 +26,18 @@ Two crash modes are provided:
 The simulator also keeps the paper's Table-4 counters: ``clwb`` and
 ``fence`` counts per operation, plus a lines-touched proxy for LLC
 misses (distinct cache lines loaded per op).
+
+``group_commit()`` opens a *group-commit epoch* for batched writers:
+inside the epoch ``clwb``/``fence`` are deferred (each dirtied line is
+recorded once), and the epoch closes with one writeback per distinct
+recorded line plus a single commit fence — the flush/fence traffic of
+a whole shard batch amortized into one persist point.  Ops inside a
+group are acknowledged only when the epoch closes; a crash mid-group
+abandons the deferred flushes, exactly as a power failure would (the
+un-acked suffix of the group may be lost, never a previously fenced
+prefix).  Counters stay honest: deferred calls count nothing, the
+close counts exactly the clwb/fence instructions it issues.  See
+docs/PMEM_MODEL.md for the full semantics and the eviction caveat.
 """
 
 from __future__ import annotations
@@ -41,6 +53,9 @@ CACHELINE_BYTES = 64
 WORDS_PER_LINE = CACHELINE_BYTES // WORD_BYTES
 
 NULL = 0  # null pointer / empty-key sentinel used across indexes
+
+_M64 = (1 << 64) - 1
+_SIGN64 = 1 << 63
 
 
 class CrashPoint(Exception):
@@ -77,7 +92,8 @@ class OpCounters:
 class Region:
     """A named PM allocation backed by two int64 arrays (cache + pm)."""
 
-    __slots__ = ("name", "rid", "cache", "pm", "dirty", "pending", "n_words")
+    __slots__ = ("name", "rid", "cache", "pm", "dirty", "pending", "n_words",
+                 "stores")
 
     def __init__(self, name: str, rid: int, n_words: int):
         self.name = name
@@ -87,6 +103,7 @@ class Region:
         self.pm = np.zeros(n_words, dtype=np.int64)
         self.dirty: Set[int] = set()  # line indices dirty in cache
         self.pending: Set[int] = set()  # line indices clwb'd, awaiting fence
+        self.stores = 0  # per-region store count (foreign-writer detection)
 
     def line_of(self, idx: int) -> int:
         return idx // WORDS_PER_LINE
@@ -119,6 +136,10 @@ class PMem:
         self.crashes = 0  # completed crash() events (snapshot invalidation)
         # Allocation log for epoch GC (RECIPE assumes a GC'd PM allocator)
         self.alloc_log: List[int] = []
+        # Group-commit epoch state (see group_commit())
+        self._group_depth = 0
+        self._group_lines: Set[Tuple[int, int]] = set()  # (rid, line)
+        self._group_fence_wanted = False
 
     # ------------------------------------------------------------------
     # allocation
@@ -147,8 +168,12 @@ class PMem:
     def store(self, region: Region, idx: int, value: int) -> None:
         """8-byte atomic store to the volatile cache."""
         self._maybe_crash()
-        region.cache[idx] = np.int64(np.uint64(value).astype(np.int64))
-        region.dirty.add(region.line_of(idx))
+        v = int(value) & _M64
+        if v >= _SIGN64:  # two's-complement wrap into the signed PM word
+            v -= _M64 + 1
+        region.cache[idx] = v
+        region.dirty.add(idx // WORDS_PER_LINE)
+        region.stores += 1
         self.counters.stores += 1
 
     def store_bulk(self, region: Region, start: int,
@@ -162,10 +187,23 @@ class PMem:
         region.cache[start:start + n] = words
         first, last = start // WORDS_PER_LINE, (start + n - 1) // WORDS_PER_LINE
         region.dirty.update(range(first, last + 1))
+        region.stores += n
         self.counters.stores += n
 
     def load_bulk(self, region: Region, start: int, n: int) -> np.ndarray:
+        """Vectorized multi-word load (counts ``n`` loads and every line
+        overlapped, so the batched write paths keep the Table-4 proxies
+        honest)."""
         self.counters.loads += n
+        first = start // WORDS_PER_LINE
+        last = (start + max(n, 1) - 1) // WORDS_PER_LINE
+        rid = region.rid
+        touched = self._touched_lines
+        for line in range(first, last + 1):
+            key = (rid, line)
+            if key not in touched:
+                touched.add(key)
+                self.counters.lines_touched += 1
         return region.cache[start:start + n].copy()
 
     def load(self, region: Region, idx: int) -> int:
@@ -184,8 +222,13 @@ class PMem:
         return True
 
     def clwb(self, region: Region, idx: int) -> None:
-        """Initiate writeback of the line containing ``idx``."""
+        """Initiate writeback of the line containing ``idx``.  Inside a
+        group-commit epoch the writeback is deferred: the line is
+        recorded once and flushed (and counted) at epoch close."""
         line = region.line_of(idx)
+        if self._group_depth:
+            self._group_lines.add((region.rid, line))
+            return
         if line in region.dirty:
             region.pending.add(line)
             region.dirty.discard(line)
@@ -198,14 +241,23 @@ class PMem:
             self.clwb(region, line * WORDS_PER_LINE)
 
     def fence(self) -> None:
-        """sfence: all pending writebacks become durable, in order."""
+        """sfence: all pending writebacks become durable, in order.
+        Inside a group-commit epoch the fence is deferred to the single
+        commit fence at epoch close."""
+        if self._group_depth:
+            self._group_fence_wanted = True
+            return
+        self._fence_now()
+
+    def _fence_now(self) -> None:
         self.counters.fence += 1
         for region in self.regions.values():
-            for line in region.pending:
-                lo = line * WORDS_PER_LINE
-                hi = min(lo + WORDS_PER_LINE, region.n_words)
-                region.pm[lo:hi] = region.cache[lo:hi]
-            region.pending.clear()
+            if region.pending:
+                for line in region.pending:
+                    lo = line * WORDS_PER_LINE
+                    hi = min(lo + WORDS_PER_LINE, region.n_words)
+                    region.pm[lo:hi] = region.cache[lo:hi]
+                region.pending.clear()
 
     def persist(self, region: Region, idx: int) -> None:
         """Convenience: clwb + fence for one word's line."""
@@ -215,6 +267,40 @@ class PMem:
     def persist_region(self, region: Region) -> None:
         self.flush_range(region, 0, region.n_words)
         self.fence()
+
+    # ------------------------------------------------------------------
+    # group commit (the sharded batched write path's persist epoch)
+    # ------------------------------------------------------------------
+    def group_commit(self) -> "_GroupCommit":
+        """Open a group-commit epoch: ``clwb`` records its line (once),
+        ``fence`` records that durability was requested, and the epoch
+        close issues one clwb per distinct recorded line plus a single
+        commit fence.  Ops inside the group are acknowledged only at
+        close; an exception (including an injected ``CrashPoint``)
+        abandons the deferred flushes — power-fail semantics, no
+        clean-up activities.  Nestable; only the outermost close
+        persists."""
+        return _GroupCommit(self)
+
+    def _close_group(self) -> None:
+        lines = sorted(self._group_lines)
+        self._group_lines = set()
+        wanted = self._group_fence_wanted or bool(lines)
+        self._group_fence_wanted = False
+        for rid, line in lines:
+            region = self.regions.get(rid)
+            if region is None:
+                continue  # freed mid-group (CoW swap garbage)
+            if line in region.dirty:
+                region.pending.add(line)
+                region.dirty.discard(line)
+            self.counters.clwb += 1
+        if wanted:
+            self._fence_now()
+
+    def _abandon_group(self) -> None:
+        self._group_lines = set()
+        self._group_fence_wanted = False
 
     # ------------------------------------------------------------------
     # locks (volatile; reinitialized on crash — RECIPE §4.2/§6)
@@ -315,6 +401,9 @@ class PMem:
                 region.pending.clear()
         elif mode != "interrupt":
             raise ValueError(f"unknown crash mode {mode!r}")
+        # a crash inside a group-commit epoch abandons its deferred
+        # flushes — the un-acked group never becomes durable
+        self._abandon_group()
         # RECIPE §4.2: locks are volatile and reinitialized after a crash.
         with self._lock_mutex:
             self.locks.clear()
@@ -346,6 +435,32 @@ class PMem:
 
     def end_op(self, start: OpCounters) -> OpCounters:
         return self.counters.delta(start)
+
+
+class _GroupCommit:
+    """Context manager behind ``PMem.group_commit()``.  On clean exit of
+    the outermost group it issues the epoch's writebacks and commit
+    fence; on exception it abandons them (power-fail semantics — the
+    un-acked group is simply not durable)."""
+
+    __slots__ = ("pmem",)
+
+    def __init__(self, pmem: PMem):
+        self.pmem = pmem
+
+    def __enter__(self) -> PMem:
+        self.pmem._group_depth += 1
+        return self.pmem
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        p = self.pmem
+        p._group_depth -= 1
+        if p._group_depth == 0:
+            if exc_type is None:
+                p._close_group()
+            else:
+                p._abandon_group()
+        return False
 
 
 def measure_op(pmem: PMem, fn: Callable[[], object]) -> Tuple[object, OpCounters]:

@@ -1,11 +1,14 @@
 """YCSB workload generator (paper §7, Table 3).
 
-Generates the exact workload mix the paper evaluates: Load A (100%
+Generates the workload mixes the paper evaluates: Load A (100%
 insert), A (50/50 read/write), B (95/5), C (100% read), E (95/5
-scan/insert).  D and F are excluded as in the paper (several indexes
-do not support updates).  Keys are uniformly distributed 8-byte random
-integers ("randint"); a "string" mode derives 24-byte-string-like keys
-by hashing (tries traverse more bytes — the cache-behavior analogue).
+scan/insert) — plus D (95/5 read-latest/insert) and F (50/50
+read/read-modify-write), which the paper excluded because several of
+its indexes lacked updates; our conversions add native update commits
+(value-word / CoW-leaf / delta stores), so both join the mix.  Keys
+are uniformly distributed 8-byte random integers ("randint"); a
+"string" mode derives 24-byte-string-like keys by hashing (tries
+traverse more bytes — the cache-behavior analogue).
 """
 
 from __future__ import annotations
@@ -22,10 +25,14 @@ WORKLOADS = {
     "A": dict(reads=0.5, inserts=0.5, scans=0.0),
     "B": dict(reads=0.95, inserts=0.05, scans=0.0),
     "C": dict(reads=1.0, inserts=0.0, scans=0.0),
+    # D reads the latest inserts (the standard YCSB-D skew)
+    "D": dict(reads=0.95, inserts=0.05, scans=0.0, latest=True),
     "E": dict(reads=0.0, inserts=0.05, scans=0.95),
     # E0 is to E what C is to B: the pure-scan variant that isolates the
     # steady-state batched scan path (no epoch churn from inserts)
     "E0": dict(reads=0.0, inserts=0.0, scans=1.0),
+    # F is read-modify-write over existing keys (native update commits)
+    "F": dict(reads=0.5, updates=0.5, scans=0.0),
 }
 
 SCAN_MAX = 100  # YCSB-E scans up to 100 records
@@ -43,6 +50,13 @@ def value_of(key: int) -> int:
     return (key ^ 0x5DEECE66D) & ((1 << 62) - 1) | 1
 
 
+def update_value(key: int, gen: int) -> int:
+    """The value YCSB-F writes back on its ``gen``-th op: usually a
+    genuinely changed value (a real update commit); when ``gen`` wraps
+    to the original it exercises the no-op-update elision."""
+    return value_of(key) ^ ((gen % 4096) << 1)
+
+
 def generate(name: str, n_load: int, n_run: int, *, seed: int = 0,
              key_space_bits: int = 60) -> Workload:
     mix = WORKLOADS[name]
@@ -54,18 +68,32 @@ def generate(name: str, n_load: int, n_run: int, *, seed: int = 0,
     run_ops: List[Op] = []
     scan_lengths: List[int] = []
     existing = load_keys
+    recent = [int(k) for k in load_keys]  # insertion order, for D's reads
     fresh = iter(np.unique(rng.integers(1 << key_space_bits,
                                         1 << (key_space_bits + 1),
                                         size=max(n_run, 1))))
+    reads = mix.get("reads", 0.0)
+    inserts = mix.get("inserts", 0.0)
+    updates = mix.get("updates", 0.0)
+    latest = bool(mix.get("latest", False))
     r = rng.random(n_run)
     targets = rng.integers(0, max(len(existing), 1), size=n_run)
     for i in range(n_run):
-        if r[i] < mix["reads"]:
-            k = int(existing[targets[i] % len(existing)])
+        if r[i] < reads:
+            if latest:
+                # YCSB-D: reads target the most recent tenth of inserts
+                window = max(1, len(recent) // 10)
+                k = recent[len(recent) - 1 - (int(targets[i]) % window)]
+            else:
+                k = int(existing[targets[i] % len(existing)])
             run_ops.append(("lookup", k, 0))
-        elif r[i] < mix["reads"] + mix["inserts"]:
+        elif r[i] < reads + inserts:
             k = int(next(fresh))
             run_ops.append(("insert", k, value_of(k)))
+            recent.append(k)
+        elif r[i] < reads + inserts + updates:
+            k = int(existing[targets[i] % len(existing)])
+            run_ops.append(("update", k, update_value(k, i)))
         else:
             k = int(existing[targets[i] % len(existing)])
             n = int(rng.integers(1, SCAN_MAX + 1))
@@ -89,14 +117,22 @@ def string_keyspace(keys: Sequence[int]) -> List[int]:
 class PhaseExecutor:
     """Executes a workload phase against an index.
 
-    The batched mode coalesces *consecutive* lookups into one
-    ``lookup_batch`` dispatch and consecutive scans into one
-    ``scan_batch`` dispatch (the paper's read-dominant YCSB-B/C mixes
-    are long lookup runs; YCSB-E is a long scan run), flushing whenever
-    a write — or an op of the other read kind — arrives, so the
-    observable op order and therefore every result matches the scalar
-    execution exactly.  Op counts, found counts, and scanned-record
-    counts are preserved either way.
+    The batched mode coalesces every protocol: consecutive lookups
+    into one ``lookup_batch`` dispatch, consecutive scans into one
+    ``scan_batch`` dispatch, and — new with the sharded write path —
+    inserts/updates/deletes into ``write_batch`` dispatches (partition
+    by shard + one group-commit persist epoch per shard run).
+
+    Buffered reads and buffered writes may slide past each other only
+    when they cannot observe each other, so every op still sees exactly
+    the state the scalar execution would show it: a lookup of a key
+    with a buffered write flushes the write buffer first; a write of a
+    key with a buffered lookup flushes the read buffer; scans — whose
+    windows are unknown until executed — always flush the write buffer
+    and are flushed by any write.  Everything that remains buffered
+    together commutes, so op results, found counts, and scanned-record
+    counts match the scalar execution exactly (asserted in
+    ``benchmarks/ycsb.py`` and ``tests/test_write_batch.py``).
 
     Scans execute as "first ``aux`` live records from ``key``"
     (``index.scan``) — real YCSB-E semantics, identical on the scalar
@@ -108,10 +144,14 @@ class PhaseExecutor:
         self.index = index
         self.batch_lookups = batch_lookups
         self.max_batch = max_batch
-        self.done = {"insert": 0, "lookup": 0, "scan": 0, "found": 0,
-                     "scanned": 0, "batches": 0, "scan_batches": 0}
+        self.done = {"insert": 0, "update": 0, "delete": 0, "lookup": 0,
+                     "scan": 0, "found": 0, "scanned": 0, "acked": 0,
+                     "batches": 0, "scan_batches": 0, "write_batches": 0}
         self._pending: List[int] = []
+        self._pending_keys: set = set()
         self._pending_scans: List[Tuple[int, int]] = []
+        self._pending_writes: List[Op] = []
+        self._pending_write_keys: set = set()
 
     def _flush_lookups(self) -> None:
         if not self._pending:
@@ -121,6 +161,7 @@ class PhaseExecutor:
         self.done["found"] += sum(r is not None for r in results)
         self.done["batches"] += 1
         self._pending.clear()
+        self._pending_keys.clear()
 
     def _flush_scans(self) -> None:
         if not self._pending_scans:
@@ -133,40 +174,74 @@ class PhaseExecutor:
         self.done["scan_batches"] += 1
         self._pending_scans.clear()
 
+    def _flush_writes(self) -> None:
+        if not self._pending_writes:
+            return
+        results = self.index.write_batch(self._pending_writes)
+        done = self.done
+        for kind, _, _ in self._pending_writes:
+            done[kind] += 1
+        done["acked"] += sum(bool(r) for r in results)
+        done["write_batches"] += 1
+        self._pending_writes.clear()
+        self._pending_write_keys.clear()
+
     def _flush(self) -> None:
         self._flush_lookups()
         self._flush_scans()
+        self._flush_writes()
 
     def run(self, ops: Sequence[Op]) -> dict:
         done = self.done
         batching = self.batch_lookups
         pending, max_batch = self._pending, self.max_batch
+        pending_keys = self._pending_keys
         pending_scans = self._pending_scans
+        pending_writes = self._pending_writes
+        pending_write_keys = self._pending_write_keys
         index, lookup = self.index, self.index.lookup
         for kind, key, aux in ops:
             if kind == "lookup":
                 if batching:
                     self._flush_scans()
+                    if key in pending_write_keys:
+                        self._flush_writes()  # must observe that write
                     pending.append(key)
+                    pending_keys.add(key)
                     if len(pending) >= max_batch:
                         self._flush_lookups()
                 else:
                     if lookup(key) is not None:
                         done["found"] += 1
                     done["lookup"] += 1
-            elif kind == "insert":
-                self._flush()
-                index.insert(key, aux)
-                done["insert"] += 1
-            else:
+            elif kind == "scan":
                 if batching:
                     self._flush_lookups()
+                    self._flush_writes()  # a scan may observe any write
                     pending_scans.append((key, aux))
                     if len(pending_scans) >= max_batch:
                         self._flush_scans()
                 else:
                     done["scanned"] += len(index.scan(key, aux))
                     done["scan"] += 1
+            else:  # insert / update / delete
+                if batching:
+                    self._flush_scans()  # buffered scans precede this write
+                    if key in pending_keys:
+                        self._flush_lookups()  # those reads precede it too
+                    pending_writes.append((kind, key, aux))
+                    pending_write_keys.add(key)
+                    if len(pending_writes) >= max_batch:
+                        self._flush_writes()
+                else:
+                    if kind == "insert":
+                        r = index.insert(key, aux)
+                    elif kind == "update":
+                        r = index.update(key, aux)
+                    else:
+                        r = index.delete(key)
+                    done["acked"] += bool(r)
+                    done[kind] += 1
         self._flush()
         return done
 
@@ -176,7 +251,8 @@ def run_workload(index, wl: Workload, *, phase: str = "run",
     """Execute a phase; returns op counts (throughput measured by caller).
     With ``batch_lookups`` consecutive reads dispatch through the
     index's ``lookup_batch``/``scan_batch`` (the Pallas probe and scan
-    kernels, for all five converted indexes)."""
+    kernels) and writes coalesce into ``write_batch`` (shard partition
+    + group commit), for all five converted indexes."""
     ops = wl.load_ops if phase == "load" else wl.run_ops
     ex = PhaseExecutor(index, batch_lookups=batch_lookups,
                        max_batch=max_batch)

@@ -1,0 +1,7 @@
+"""Shard routing for the batched write path: vectorized splitmix64 /
+key-prefix routes plus the stable sort-by-shard partition.  See
+README.md for the invariants."""
+
+from .ops import mix64_ref, partition_writes, route_ref, route_shards
+
+__all__ = ["mix64_ref", "partition_writes", "route_ref", "route_shards"]

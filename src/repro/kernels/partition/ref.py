@@ -1,0 +1,66 @@
+"""Numpy oracle for shard routing — the write-path partitioner.
+
+Two routing schemes, both mapping int64 PM keys onto a power-of-two
+shard count:
+
+* ``hash``   — top ``log2(n_shards)`` bits of the splitmix64 finalizer
+  (bit-for-bit the ``core.clht._mix`` / ``kernels.clht_probe.mix64``
+  hash), so shard placement is uniform regardless of key skew.  Used
+  by the unordered indexes.
+* ``prefix`` — top bits of the key itself (keys are PM words in
+  ``[0, 2^63)``, so bit 62 downward).  Shards are contiguous key
+  ranges, which for tries/B+ trees means a shard's writes touch one
+  subtree family.  Used by the ordered indexes.
+
+The kernel in ``kernel.py`` reproduces these routes on 32-bit lanes
+(16-bit-limb 64-bit arithmetic); this module is the ground truth it is
+tested against, and the host control-plane router ``ops.py`` uses
+directly (native uint64 beats interpret-mode lanes at control-plane
+batch sizes, mirroring the host-side hashing in kernels/clht_probe).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+
+
+def mix64_ref(keys: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer — must match core.clht._mix."""
+    z = np.asarray(keys).astype(np.uint64) + _U64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return z ^ (z >> _U64(31))
+
+
+def route_ref(keys: np.ndarray, n_shards: int,
+              scheme: str = "hash") -> np.ndarray:
+    """Shard id per key: [Q] int32 in [0, n_shards)."""
+    assert n_shards >= 1 and (n_shards & (n_shards - 1)) == 0, \
+        f"n_shards must be a power of two, got {n_shards}"
+    keys = np.asarray(keys, np.int64)
+    if n_shards == 1:
+        return np.zeros(keys.shape, np.int32)
+    b = n_shards.bit_length() - 1
+    if scheme == "hash":
+        return (mix64_ref(keys) >> _U64(64 - b)).astype(np.int32)
+    if scheme == "prefix":
+        # keys are non-negative 63-bit words: route on bits [62, 63-b)
+        return ((keys >> np.int64(63 - b)) & np.int64(n_shards - 1)
+                ).astype(np.int32)
+    raise ValueError(f"unknown shard scheme {scheme!r}")
+
+
+def partition_ref(keys: np.ndarray, n_shards: int, scheme: str = "hash"):
+    """(shards [Q] int32, order [Q] int64, offsets [n_shards+1] int64):
+    ``order`` is the *stable* sort-by-shard permutation (same-shard ops
+    keep their arrival order — same-key ops always share a shard, so
+    per-key history is preserved); ``offsets[s]:offsets[s+1]`` indexes
+    shard ``s``'s run within ``order``."""
+    shards = route_ref(keys, n_shards, scheme)
+    order = np.argsort(shards, kind="stable")
+    counts = np.bincount(shards, minlength=n_shards)
+    offsets = np.zeros(n_shards + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return shards, order, offsets

@@ -23,6 +23,15 @@ Restart recovery ends with a prefix-range warmup: one batched
 ``scan_batch`` sweep (kernels/scan) enumerates the surviving prefix
 cache and leaves its snapshot warm for the first admissions.
 
+Writes ride the sharded batched write layer: page grants and prefix
+admissions drain through ``write_batch`` (kernels/partition shard
+routing + one ``PMem.group_commit`` persist epoch per shard run), so
+an admission's flush/fence traffic amortizes across its grants and —
+because ``write_batch`` invalidates only the shards it wrote — prefix
+ingest no longer invalidates the whole prefix-cache snapshot: the next
+admission's prefix probe serves warm shards from the existing export
+(``RecipeIndex._shard_refine``) and walks only the dirty ones.
+
 The compute plane (decode attention over the pages) is
 kernels/paged_attention; this module is the control plane and a
 CPU-scale reference server driving reduced-config models.
@@ -95,25 +104,47 @@ class PagedKVManager:
     def map_page(self, seq_id: int, logical: int, physical: int) -> None:
         self.table.insert(self._bt_key(seq_id, logical), physical + 1)
 
+    def map_pages(self, seq_id: int, grants: List[Tuple[int, int]]) -> None:
+        """Commit many ``(logical, physical)`` grants in one sharded
+        ``write_batch`` — one group-commit persist epoch per touched
+        shard instead of a flush+fence pair per grant."""
+        if not grants:
+            return
+        self.table.write_batch([("insert", self._bt_key(seq_id, l), p + 1)
+                                for l, p in grants])
+
     def lookup_page(self, seq_id: int, logical: int) -> Optional[int]:
         v = self.table.lookup(self._bt_key(seq_id, logical))
         return None if v is None else v - 1
 
-    def lookup_pages_batch(self, pairs: List[Tuple[int, int]]
+    def lookup_pages_batch(self, pairs: List[Tuple[int, int]], *,
+                           force_kernel: bool = True
                            ) -> List[Optional[int]]:
         """Resolve many (seq_id, logical) translations in one batched
-        probe over the block table's snapshot — the decode hot path."""
+        probe over the block table's snapshot.  The decode hot path
+        forces the kernel (default); the admission path passes
+        ``force_kernel=False`` — it immediately follows its own grants,
+        so adaptive dispatch may serve warm shards via ``_shard_refine``
+        or go scalar instead of re-exporting per admission."""
         if not pairs:
             return []
         res = self.table.lookup_batch(
-            [self._bt_key(s, l) for s, l in pairs], force_kernel=True)
+            [self._bt_key(s, l) for s, l in pairs],
+            force_kernel=force_kernel)
         return [None if v is None else v - 1 for v in res]
 
     def release_seq(self, seq_id: int, n_logical: int) -> None:
-        for l in range(n_logical):
-            p = self.lookup_page(seq_id, l)
+        """Tear down a sequence's translations with one batched probe
+        and one sharded delete batch (deletes of never-mapped logicals
+        are elided, so untouched shards keep their snapshot epochs)."""
+        pairs = [(seq_id, l) for l in range(n_logical)]
+        phys = self.lookup_pages_batch(pairs, force_kernel=False)
+        ops = [("delete", self._bt_key(seq_id, l), 0)
+               for (_, l), p in zip(pairs, phys) if p is not None]
+        if ops:
+            self.table.write_batch(ops)
+        for p in phys:
             if p is not None:
-                self.table.delete(self._bt_key(seq_id, l))
                 self.free_page(p)
 
     # -- prefix cache -----------------------------------------------------
@@ -146,15 +177,24 @@ class PagedKVManager:
             covered += self.page_size
         return covered, pages
 
-    def prefix_insert(self, tokens: List[int], pages: List[int]) -> None:
+    def prefix_insert(self, tokens: List[int], pages: List[int]) -> int:
+        """Ingest the prompt's whole-block hashes through one sharded
+        ``write_batch``: the prefix cache's snapshot is invalidated only
+        in the shards the new hashes route to, so the next admission's
+        prefix probe still serves every warm shard from the existing
+        export.  Returns the number of blocks ingested."""
         h = 0
         ps = self.page_size
+        ops: List[Tuple[str, int, int]] = []
         for b, page in enumerate(pages):
             blk = tokens[b * ps:(b + 1) * ps]
             if len(blk) < ps:
                 break
             h = _roll_hash(h, blk)
-            self.prefix.insert(h, page + 1)
+            ops.append(("insert", h, page + 1))
+        if ops:
+            self.prefix.write_batch(ops)
+        return len(ops)
 
     def recover(self) -> int:
         """Post-crash: locks were reinitialized by PMem.crash; the
@@ -208,7 +248,8 @@ class Server:
         self._next_rid = 0
         self.stats = {"prefill_tokens": 0, "prefix_hits": 0,
                       "decode_steps": 0, "page_translations": 0,
-                      "translation_batches": 0, "warm_prefixes_restored": 0}
+                      "translation_batches": 0, "warm_prefixes_restored": 0,
+                      "ingest_write_batches": 0, "prefix_shard_refined": 0}
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
         rid = self._next_rid
@@ -224,18 +265,25 @@ class Server:
         logits, caches = self.model.prefill(self.params, batch,
                                             len(req.prompt))
         self.stats["prefill_tokens"] += len(req.prompt) - covered
-        # grant pages for the prompt + commit to the block table
+        # grant pages for the prompt; all grants commit through ONE
+        # sharded write_batch per index (block table, then prefix
+        # cache) — the ingest never invalidates shards it didn't write
         n_logical = -(-len(req.prompt) // self.page_size)
-        granted = []
-        for l in range(n_logical):
-            p = self.kv.lookup_page(req.rid, l)
+        have = self.kv.lookup_pages_batch(
+            [(req.rid, l) for l in range(n_logical)], force_kernel=False)
+        granted, grants = [], []
+        for l, p in enumerate(have):
             if p is None:
                 p = self.kv.alloc_page()
                 if p is None:
                     raise MemoryError("KV page pool exhausted")
-                self.kv.map_page(req.rid, l, p)
+                grants.append((l, p))
             granted.append(p)
-        self.kv.prefix_insert(req.prompt, granted)
+        self.kv.map_pages(req.rid, grants)
+        n_blocks = self.kv.prefix_insert(req.prompt, granted)
+        self.stats["ingest_write_batches"] += (len(grants) > 0) + (n_blocks > 0)
+        self.stats["prefix_shard_refined"] = \
+            self.kv.prefix.shard_stats["refined_queries"]
         # pad dense compute cache to max_len
         def pad(c):
             if c.ndim >= 3 and c.shape[-3] == len(req.prompt):

@@ -1,0 +1,351 @@
+"""Sharded batched write path: ``write_batch`` must be positionally
+identical to scalar insert/update/delete for every converted index,
+recover from crashes landing inside a group-commit epoch, invalidate
+only the shards it writes (untouched shards keep serving the existing
+snapshot), elide no-op updates, and *amortize* — never hide — the
+clwb/fence traffic of the ops it groups."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CrashPoint, PMem, PART, PHOT, PBwTree, PCLHT,
+                        PMasstree, PMSnapshot)
+from repro.core.ycsb import generate, run_workload
+
+RNG = np.random.default_rng(13)
+
+FACTORIES = [
+    ("P-CLHT", lambda p: PCLHT(p, n_buckets=64)),
+    ("P-ART", PART),
+    ("P-HOT", PHOT),
+    ("P-Masstree", PMasstree),
+    ("P-BwTree", PBwTree),
+]
+
+
+def _mixed_ops(rng, existing, n, clustered=False):
+    """insert/update/delete stream; ``clustered`` packs keys into a
+    narrow range so tree indexes form multi-op leaf groups."""
+    base = int(rng.integers(1, 1 << 59)) if clustered else 0
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        if clustered:
+            k = base + int(rng.integers(0, 150))
+            if r < 0.5:
+                ops.append(("insert", k, (k % 99991) + 1))
+            elif r < 0.75:
+                ops.append(("update", k, int(rng.integers(1, 1 << 40)) | 1))
+            else:
+                ops.append(("delete", k, 0))
+            continue
+        if r < 0.4 or not existing:
+            k = int(rng.integers(1, 1 << 60))
+            ops.append(("insert", k, (k % 99991) + 1))
+            existing.append(k)
+        elif r < 0.7:
+            k = existing[int(rng.integers(0, len(existing)))]
+            ops.append(("update", k, int(rng.integers(1, 1 << 40)) | 1))
+        else:
+            k = (existing[int(rng.integers(0, len(existing)))]
+                 if rng.random() < 0.8 else int(rng.integers(1, 1 << 60)))
+            ops.append(("delete", k, 0))
+    return ops
+
+
+def _apply_scalar(idx, ops):
+    return [idx._apply_write(kind, int(k), int(v)) for kind, k, v in ops]
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_write_batch_equals_scalar(name, factory):
+    """Positional results and final state match scalar op-by-op
+    application, for uniform and clustered (leaf-group) key streams."""
+    rng = np.random.default_rng(29)
+    existing = []
+    preload = _mixed_ops(rng, existing, 150)
+    ops = _mixed_ops(rng, existing, 300) + _mixed_ops(rng, [], 150,
+                                                     clustered=True)
+    ia, ib = factory(PMem()), factory(PMem())
+    _apply_scalar(ia, preload)
+    _apply_scalar(ib, preload)
+    scalar = _apply_scalar(ia, ops)
+    batched = ib.write_batch(ops)
+    assert scalar == batched, [
+        (o, s, b) for o, s, b in zip(ops, scalar, batched) if s != b][:5]
+    assert sorted(ia.items()) == sorted(ib.items())
+    ia.check_invariants()
+    ib.check_invariants()
+    # group commit closed every epoch: nothing left unpersisted
+    ib.pmem.assert_clean()
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_write_batch_same_key_history(name, factory):
+    """Ops on one key keep their arrival order (stable partition), so a
+    full insert→delete→insert→update→update(no-op) history folds to the
+    scalar result even inside one batch."""
+    idx = factory(PMem())
+    k = 0x1234567
+    ops = [("insert", k, 10), ("delete", k, 0), ("insert", k, 20),
+           ("update", k, 30), ("update", k, 30)]
+    ref = factory(PMem())
+    assert idx.write_batch(ops) == _apply_scalar(ref, ops)
+    assert idx.lookup(k) == 30
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_mid_group_commit_crash_recovery(name, factory):
+    """Crash after each of a sample of atomic stores inside a
+    write_batch (the §5 targeted strategy via PMSnapshot restore), then
+    powerfail: every pre-batch key must read back, every batch op must
+    be atomic (old state or new state, never torn), and new writes must
+    succeed on the recovered image."""
+    pmem = PMem()
+    idx = factory(pmem)
+    rng = np.random.default_rng(31)
+    pre = {int(k): (int(k) % 99991) + 1
+           for k in rng.integers(1, 1 << 60, size=80)}
+    for k, v in pre.items():
+        idx.insert(k, v)
+    victims = list(pre)[:6]
+    fresh = [int(k) for k in rng.integers(1 << 60, 1 << 61, size=6)]
+    batch = ([("insert", k, k % 1000 + 2) for k in fresh]
+             + [("delete", k, 0) for k in victims[:3]]
+             + [("update", k, 999999) for k in victims[3:]])
+    snap = PMSnapshot(pmem, idx)
+    before = pmem.counters.stores
+    idx.write_batch(batch)
+    n_stores = pmem.counters.stores - before
+    snap.restore(pmem)
+    assert n_stores > 0
+    for k_at in range(0, n_stores, max(1, n_stores // 8)):
+        pmem.arm_crash(after_stores=k_at)
+        try:
+            idx.write_batch(batch)
+            pmem.disarm_crash()
+        except CrashPoint:
+            pass
+        pmem.crash(mode="powerfail")
+        idx.recover()
+        for k, v in pre.items():
+            got = idx.lookup(k)
+            if k in victims[:3]:
+                assert got in (v, None), (k_at, k, got)  # delete: old/absent
+            elif k in victims[3:]:
+                assert got in (v, 999999), (k_at, k, got)  # update: old/new
+            else:
+                assert got == v, (k_at, k, got)  # untouched: durable
+        for k in fresh:
+            assert idx.lookup(k) in (None, k % 1000 + 2), (k_at, k)
+        idx.check_invariants()
+        # the recovered image accepts and serves new writes
+        assert idx.insert(777777777 + k_at, 42)
+        assert idx.lookup(777777777 + k_at) == 42
+        snap.restore(pmem)
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_untouched_shards_keep_snapshot_epochs(name, factory):
+    """write_batch bumps only the shards it wrote; queries routing to
+    untouched shards are served from the existing snapshot without a
+    re-export (the serving prefix-cache property)."""
+    idx = factory(PMem())
+    rng = np.random.default_rng(37)
+    keys = [int(k) for k in np.unique(rng.integers(1, 1 << 60, size=300))]
+    idx.write_batch([("insert", k, (k % 4093) + 1) for k in keys])
+    snap_obj = idx.snapshot()
+    before = list(idx._effective_shard_epochs())
+    # write a batch confined to a few shards
+    batch_keys = [int(k) for k in rng.integers(1, 1 << 56, size=12)]
+    idx.write_batch([("insert", k, 5) for k in batch_keys])
+    after = list(idx._effective_shard_epochs())
+    touched = set(int(s) for s in idx.shard_route(
+        np.asarray(batch_keys, np.int64)))
+    assert touched != set(range(idx.N_WRITE_SHARDS))  # test is meaningful
+    for s in range(idx.N_WRITE_SHARDS):
+        if s in touched:
+            assert after[s] > before[s], s
+        else:
+            assert after[s] == before[s], s
+    # the memoized snapshot object survives a sharded batch…
+    assert idx._snapshot is snap_obj
+    # …and clean-shard lookups are served from it without re-export
+    clean = [k for k, s in zip(
+        keys, idx.shard_route(np.asarray(keys, np.int64)).tolist())
+        if s not in touched]
+    assert len(clean) >= idx._MIN_KERNEL_BATCH
+    calls = {"n": 0}
+    orig = idx.export_arrays
+
+    def counting_export():
+        calls["n"] += 1
+        return orig()
+
+    idx.export_arrays = counting_export
+    hits_before = idx.shard_stats["refined_queries"]
+    got = idx.lookup_batch(clean)
+    assert got == [idx.lookup(k) for k in clean]
+    assert calls["n"] == 0, "clean-shard batch forced a re-export"
+    assert idx.shard_stats["refined_queries"] >= hits_before + len(clean)
+
+
+@pytest.mark.parametrize("name,factory", FACTORIES)
+def test_noop_update_keeps_snapshot_valid(name, factory):
+    """Overwriting a key with its current value writes nothing and
+    leaves the snapshot fully valid — scalar and batched paths."""
+    idx = factory(PMem())
+    keys = [int(k) for k in np.unique(
+        RNG.integers(1, 1 << 60, size=60))]
+    for k in keys:
+        idx.insert(k, (k % 4093) + 1)
+    s = idx.snapshot()
+    k0 = keys[0]
+    stores = idx.pmem.counters.stores
+    assert idx.update(k0, (k0 % 4093) + 1)  # scalar no-op
+    assert idx.write_batch([("update", k, (k % 4093) + 1)
+                            for k in keys[:10]]) == [True] * 10
+    assert idx.pmem.counters.stores == stores, "no-op updates stored"
+    assert idx.snapshot() is s
+    # a changed value is a real update and must invalidate its shard
+    assert idx.update(k0, 123456789)
+    assert idx.lookup(k0) == 123456789
+    assert idx.snapshot() is not s
+
+
+def test_partition_kernel_matches_ref():
+    """kernels/partition lane-limb route against the uint64 oracle,
+    including keys that stress every 16-bit carry path."""
+    from repro.kernels.partition import partition_writes, route_ref, \
+        route_shards
+    rng = np.random.default_rng(41)
+    keys = np.concatenate([
+        rng.integers(1, 1 << 62, size=3000),
+        rng.integers(1, 1 << 16, size=64),
+        [1, 2, (1 << 62) + 5, (1 << 63) - 1],
+    ]).astype(np.int64)
+    keys[5:20] |= 0x80000000  # low-half sign bit
+    keys[25:40] |= (0xFFFF0000FFFF0000 >> 1)  # dense carry chains
+    for scheme in ("hash", "prefix"):
+        for n in (1, 2, 16, 2048):
+            assert (route_ref(keys, n, scheme)
+                    == route_shards(keys, n, scheme, use_kernel=True)).all()
+    shards, order, offsets = partition_writes(keys, 16, "prefix")
+    assert offsets[-1] == len(keys)
+    assert (np.diff(shards[order]) >= 0).all()  # sorted by shard
+    for s in range(16):  # stable within each shard
+        run = order[offsets[s]:offsets[s + 1]]
+        assert (np.diff(run) > 0).all()
+
+
+@pytest.mark.parametrize("name,factory", [
+    ("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
+    ("P-Masstree", PMasstree),
+    ("P-BwTree", PBwTree),
+])
+def test_group_commit_amortizes_persist_traffic(name, factory):
+    """Per-insert clwb/fence through write_batch must not exceed the
+    scalar path (group commit amortizes; the close still flushes every
+    dirtied line once and fences once per shard run)."""
+    rng = np.random.default_rng(43)
+    keys = [int(k) for k in np.unique(rng.integers(1, 1 << 60, size=600))]
+    load, fresh = keys[:400], keys[400:]
+    scalar_pm = PMem()
+    ia = factory(scalar_pm)
+    for k in load:
+        ia.insert(k, k % 97 + 1)
+    c0 = scalar_pm.counters.snapshot()
+    for k in fresh:
+        ia.insert(k, 7)
+    cs = scalar_pm.counters.delta(c0)
+    batch_pm = PMem()
+    ib = factory(batch_pm)
+    for k in load:
+        ib.insert(k, k % 97 + 1)
+    c0 = batch_pm.counters.snapshot()
+    ib.write_batch([("insert", k, 7) for k in fresh])
+    cb = batch_pm.counters.delta(c0)
+    n = len(fresh)
+    assert cb.clwb / n <= cs.clwb / n + 1e-9, (cb.clwb, cs.clwb)
+    assert cb.fence / n <= cs.fence / n + 1e-9, (cb.fence, cs.fence)
+    assert sorted(ia.items()) == sorted(ib.items())
+    batch_pm.assert_clean()
+
+
+def test_group_commit_defers_and_closes():
+    """Unit semantics of PMem.group_commit: clwb/fence defer inside the
+    epoch (counted once per line + one fence at close), and a crash
+    mid-epoch abandons the un-acked group entirely."""
+    pmem = PMem()
+    r = pmem.alloc("gc", 64)
+    pmem.persist_region(r)
+    c0 = pmem.counters.snapshot()
+    with pmem.group_commit():
+        for i in range(8):  # one cache line, stored 8 times
+            pmem.store(r, i, i + 1)
+            pmem.clwb(r, i)
+            pmem.fence()
+        d = pmem.counters.delta(c0)
+        assert d.clwb == 0 and d.fence == 0  # all deferred
+    d = pmem.counters.delta(c0)
+    assert d.clwb == 1 and d.fence == 1  # once per line + commit fence
+    pmem.assert_clean()
+    assert [int(r.pm[i]) for i in range(8)] == list(range(1, 9))
+    # crash inside the epoch: nothing of the group becomes durable
+    c0 = pmem.counters.snapshot()
+    pmem.arm_crash(after_stores=4)
+    with pytest.raises(CrashPoint):
+        with pmem.group_commit():
+            for i in range(8):
+                pmem.store(r, i, 100 + i)
+                pmem.clwb(r, i)
+                pmem.fence()
+    pmem.crash(mode="powerfail")
+    assert [int(r.pm[i]) for i in range(8)] == list(range(1, 9))
+    assert pmem.counters.delta(c0).fence == 0  # the epoch never closed
+
+
+@pytest.mark.parametrize("wl_name", ["A", "D", "F"])
+def test_executor_write_coalescing_counts(wl_name):
+    """PhaseExecutor's write buffering preserves every observable op
+    result on the write-heavy YCSB mixes (conflicting reads flush the
+    write buffer, so reordering is only ever between commuting ops)."""
+    for factory in (lambda p: PCLHT(p, n_buckets=256), PMasstree):
+        wl = generate(wl_name, 500, 400, seed=17)
+        ia, ib = factory(PMem()), factory(PMem())
+        run_workload(ia, wl, phase="load")
+        run_workload(ib, wl, phase="load")
+        scalar = run_workload(ia, wl, phase="run")
+        batched = run_workload(ib, wl, phase="run", batch_lookups=True,
+                               max_batch=64)
+        for key in ("insert", "update", "delete", "lookup", "found",
+                    "acked"):
+            assert scalar[key] == batched[key], (wl_name, key)
+        assert batched["write_batches"] > 0
+        assert sorted(ia.items()) == sorted(ib.items())
+
+
+def test_serving_ingest_keeps_warm_shards():
+    """Prefix-cache ingest through write_batch leaves warm shards'
+    snapshot epochs intact: a later admission's prefix probe serves
+    them from the existing export (no re-export, counted in
+    shard_stats) while still returning exact results."""
+    from repro.serving.engine import PagedKVManager
+    pmem = PMem()
+    kv = PagedKVManager(pmem, n_pages=512, page_size=4)
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        toks = [int(t) for t in rng.integers(1, 1000, size=16)]
+        kv.prefix_insert(toks, [kv.alloc_page() for _ in range(4)])
+    warm = [int(t) for t in rng.integers(1, 1000, size=128)]  # 32 blocks
+    kv.prefix_insert(warm, [kv.alloc_page() for _ in range(32)])
+    covered, _ = kv.prefix_lookup(warm)
+    assert covered == len(warm)
+    # steady serving keeps a warm export (decode/warmup probes force it)
+    kv.prefix.lookup_batch(kv._block_hashes(warm), force_kernel=True)
+    before = kv.prefix.shard_stats["refined_queries"]
+    toks2 = [int(t) for t in rng.integers(1001, 2000, size=16)]
+    kv.prefix_insert(toks2, [kv.alloc_page() for _ in range(4)])
+    covered2, _ = kv.prefix_lookup(warm)
+    assert covered2 == len(warm)
+    assert kv.prefix.shard_stats["refined_queries"] > before

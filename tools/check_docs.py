@@ -3,13 +3,15 @@
 
 Fails (exit 1) when:
 
-* a relative markdown link in docs/, EXPERIMENTS.md, or a kernel
-  package README resolves to a missing file;
+* a relative markdown link in README.md, docs/, EXPERIMENTS.md, or a
+  kernel package README resolves to a missing file;
 * a ``kernels/<name>`` reference in the checked documents names a
   kernel package that does not exist under src/repro/kernels/
   (dangling kernel-package references);
-* one of the four index kernel packages (probe, clht_probe,
-  art_probe, scan) is missing its README.md.
+* one of the five index kernel packages (probe, clht_probe,
+  art_probe, scan, partition) is missing its README.md;
+* the top-level README.md, docs/ARCHITECTURE.md, or
+  docs/PMEM_MODEL.md is missing.
 """
 
 from __future__ import annotations
@@ -20,14 +22,17 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 KERNELS = ROOT / "src" / "repro" / "kernels"
-README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan")
+README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition")
+TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
+                     "docs/PMEM_MODEL.md")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
 
 
 def doc_files():
-    docs = sorted((ROOT / "docs").glob("**/*.md"))
+    docs = [ROOT / "README.md"]
+    docs += sorted((ROOT / "docs").glob("**/*.md"))
     docs += [ROOT / "EXPERIMENTS.md"]
     docs += sorted(KERNELS.glob("*/README.md"))
     return [p for p in docs if p.exists()]
@@ -57,8 +62,9 @@ def main() -> int:
     kernel_pkgs = {p.name for p in KERNELS.iterdir() if p.is_dir()}
     errors = []
     files = doc_files()
-    if not (ROOT / "docs" / "ARCHITECTURE.md").exists():
-        errors.append("docs/ARCHITECTURE.md is missing")
+    for rel in TOP_DOCS_REQUIRED:
+        if not (ROOT / rel).exists():
+            errors.append(f"{rel} is missing")
     for name in README_REQUIRED:
         if not (KERNELS / name / "README.md").exists():
             errors.append(f"src/repro/kernels/{name}/README.md is missing")
