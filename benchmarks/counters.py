@@ -9,8 +9,9 @@ The paper's trends to validate:
   * FAST&FAIR flushes more than append-style indexes on inserts.
 
 The group-commit block compares the same per-insert clwb/fence between
-the scalar write path and the sharded ``write_batch`` (one persist
-epoch per shard run): group commit must *amortize* persist traffic —
+the scalar write path and sharded write plans (``execute`` write
+waves, one persist epoch per shard run): group commit must *amortize*
+persist traffic —
 batched per-op counts at or below scalar — never hide it (deferred
 flushes are all issued, once per distinct line, at each epoch close).
 """
@@ -22,7 +23,7 @@ from typing import Callable, Dict
 import numpy as np
 
 from repro.core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem,
-                        measure_op)
+                        Plan, measure_op)
 from repro.core.baselines import CCEH, FastFair, LevelHashing
 
 INDEXES = {
@@ -78,17 +79,20 @@ def run(n_load: int = 5000, n_measure: int = 2000, seed: int = 11):
         print(f"  {name:12s} {row[0]:9.2f} {row[1]:10.2f} "
               f"{row[2]:10.2f} {row[3]:10.2f}")
     print("# group commit — per-insert clwb/fence, scalar write path vs "
-          "sharded write_batch")
+          "sharded write plans")
     print(f"  {'index':12s} {'clwb/ins':>9s} {'-> batched':>11s} "
           f"{'fence/ins':>10s} {'-> batched':>11s}")
     for name in GROUP_COMMIT:
         pmem = PMem()
         idx = INDEXES[name](pmem)
-        idx.write_batch([("insert", int(k), int(k) + 1) for k in load_keys])
+        idx.execute(Plan.from_ops(
+            [("insert", int(k), int(k) + 1) for k in load_keys]),
+            collect_results=False)
         ops = [("insert", int(k), 7) for k in fresh_keys]
         c0 = pmem.counters.snapshot()
         for lo in range(0, len(ops), 512):
-            idx.write_batch(ops[lo:lo + 512])
+            idx.execute(Plan.from_ops(ops[lo:lo + 512]),
+                        collect_results=False)
         d = pmem.counters.delta(c0)
         n = len(ops)
         s_clwb, s_fence = scalar_ins[name]

@@ -86,12 +86,26 @@ def main() -> None:
             print(f"{name},{payload},")
             flat.append({"name": name, "value": payload})
     if args.json:
+        # scheduler-quality summary: total plan waves and the
+        # op-weighted mean wave width across every ycsb_mixed_plan row,
+        # so BENCH_ycsb.json tracks conflict-wave scheduling over time
+        wave_rows = [r for r in flat if "_waves" in r["name"]
+                     and r["name"].startswith("ycsb_mixed_plan/")]
+        width_rows = {r["name"].replace("_mean_wave_width", "_waves"):
+                      r["value"] for r in flat
+                      if r["name"].endswith("_mean_wave_width")}
+        total_waves = sum(r["value"] for r in wave_rows)
+        total_wave_ops = sum(r["value"] * width_rows.get(r["name"], 0)
+                             for r in wave_rows)
         record = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "commit": _git_commit(),
             "quick": bool(args.quick),
             "n_load": n_load,
             "n_run": n_run,
+            "plan_waves_total": total_waves,
+            "plan_mean_wave_width": (total_wave_ops / total_waves
+                                     if total_waves else 0.0),
             "rows": flat,
         }
         # accumulate: the file holds a list of run records (trajectory)

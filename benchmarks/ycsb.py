@@ -72,8 +72,8 @@ def bench_index(name: str, factory: Callable, n_load: int, n_run: int,
 
 
 def bench_batched_scan(n_load: int, n_run: int, workloads=("E", "E0")):
-    """Scalar vs batched range-scan path (the kernels/scan lower-bound +
-    window-gather kernel) on YCSB-E.  E is the honesty column — its 5%
+    """Scalar vs batched range-scan path (scan plan waves over the
+    kernels/scan lower-bound + window-gather kernel) on YCSB-E.  E is the honesty column — its 5%
     inserts bump the snapshot epoch, so small stale scan batches fall
     back to the scalar path; E0 (100% scans) isolates the steady-state
     batched scan engine, as C does for lookups.  Result equivalence is
@@ -82,7 +82,7 @@ def bench_batched_scan(n_load: int, n_run: int, workloads=("E", "E0")):
     steady-state pass (mirroring bench_batched's warm run)."""
     rows = []
     targets = [("P-Masstree", PMasstree), ("P-BwTree", PBwTree)]
-    print(f"# batched scan path — scalar vs scan_batch, Kops/s "
+    print(f"# batched scan path — scalar vs scan plans, Kops/s "
           f"({n_run} run ops)")
     for name, factory in targets:
         out = {}
@@ -114,13 +114,94 @@ def bench_batched_scan(n_load: int, n_run: int, workloads=("E", "E0")):
     return rows
 
 
+def bench_mixed_plan(n_load: int, n_run: int, workloads=("A", "D", "F")):
+    """``execute(plan)`` vs the PR-4 buffered-flush baseline on the
+    mixed read/write mixes — the tentpole claim of the operation-plan
+    API.  Both paths batch: the baseline is the pre-plan
+    PhaseExecutor (one buffer per protocol, flushed on the first
+    cross-buffer key conflict — ``buffered=True``), the plan path
+    builds one operation plan per ``max_batch`` ops and lets the
+    conflict-wave scheduler batch across the read/write boundary.
+    Same generated op stream, same index state, results asserted
+    identical on an untimed warm pass.
+
+    Each row records the plan-wave count and mean wave width
+    (scheduler quality over time in BENCH_ycsb.json) and per-write-op
+    clwb/fence for both paths — plan waves must amortize persist
+    traffic at least as well as buffered flushing (plan <= buffered),
+    never hide it."""
+    rows = []
+    targets = [("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
+               ("P-ART", PART), ("P-HOT", PHOT),
+               ("P-Masstree", PMasstree), ("P-BwTree", PBwTree)]
+    sig = ("found", "acked", "insert", "update", "delete", "lookup")
+    print(f"# mixed operation plans — buffered-flush vs execute(plan), "
+          f"Kops/s ({n_run} run ops)")
+    for name, factory in targets:
+        out = {}
+        for wl_name in workloads:
+            wl = generate(wl_name, n_load, n_run, seed=7)
+            n_ops = len(wl.run_ops)
+            pm_b = PMem()
+            idx_b = factory(pm_b)
+            run_workload(idx_b, wl, phase="load", batch_lookups=True)
+            warm_b = run_workload(idx_b, wl, phase="run",
+                                  batch_lookups=True, buffered=True)
+            pm_p = PMem()
+            idx_p = factory(pm_p)
+            run_workload(idx_p, wl, phase="load", batch_lookups=True)
+            warm_p = run_workload(idx_p, wl, phase="run",
+                                  batch_lookups=True)
+            assert all(warm_p[k] == warm_b[k] for k in sig), \
+                "plan path diverged from buffered-flush results"
+            assert sorted(idx_b.items()) == sorted(idx_p.items())
+            pm_b = PMem()
+            idx_b = factory(pm_b)
+            run_workload(idx_b, wl, phase="load", batch_lookups=True)
+            c0 = pm_b.counters.snapshot()
+            t0 = time.perf_counter()
+            buf = run_workload(idx_b, wl, phase="run",
+                               batch_lookups=True, buffered=True)
+            t_b = time.perf_counter() - t0
+            cb = pm_b.counters.delta(c0)
+            pm_p = PMem()
+            idx_p = factory(pm_p)
+            run_workload(idx_p, wl, phase="load", batch_lookups=True)
+            c0 = pm_p.counters.snapshot()
+            t0 = time.perf_counter()
+            plan = run_workload(idx_p, wl, phase="run", batch_lookups=True)
+            t_p = time.perf_counter() - t0
+            cp = pm_p.counters.delta(c0)
+            assert all(plan[k] == buf[k] for k in sig), \
+                "plan path diverged from buffered-flush results"
+            n_writes = max(plan["insert"] + plan["update"]
+                           + plan["delete"], 1)
+            out[f"{wl_name}_buffered"] = n_ops / t_b / 1e3
+            out[f"{wl_name}_plan"] = n_ops / t_p / 1e3
+            out[f"{wl_name}_speedup"] = t_b / t_p
+            out[f"{wl_name}_waves"] = plan["waves"]
+            out[f"{wl_name}_mean_wave_width"] = (
+                plan["wave_ops"] / max(plan["waves"], 1))
+            out[f"{wl_name}_clwb_buffered"] = cb.clwb / n_writes
+            out[f"{wl_name}_clwb_plan"] = cp.clwb / n_writes
+            out[f"{wl_name}_fence_buffered"] = cb.fence / n_writes
+            out[f"{wl_name}_fence_plan"] = cp.fence / n_writes
+        rows.append((f"ycsb_mixed_plan/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"{w}: {out[f'{w}_buffered']:7.1f} -> {out[f'{w}_plan']:8.1f} "
+            f"({out[f'{w}_speedup']:4.1f}x, {out[f'{w}_waves']:3d} waves "
+            f"x{out[f'{w}_mean_wave_width']:6.1f})" for w in workloads))
+    return rows
+
+
 def bench_batched_write(n_load: int, n_run: int, workloads=("A", "D", "F")):
-    """Scalar vs sharded batched write path on the write-heavy mixes:
+    """Scalar vs batched write path on the write-heavy mixes:
     YCSB-A (50/50 read/insert), D (95/5 read-latest/insert), F (50/50
-    read/read-modify-write).  The batched run coalesces writes into
-    ``write_batch`` (kernels/partition shard routing + one group-commit
-    persist epoch per shard run) and lets non-conflicting reads batch
-    across them; the scalar run applies every op one at a time.
+    read/read-modify-write).  The batched run executes operation plans
+    whose write waves ride the sharded group-commit path
+    (kernels/partition shard routing + one group-commit persist epoch
+    per shard run) and lets non-conflicting reads batch across them;
+    the scalar run applies every op one at a time.
 
     Honesty checks built in: an untimed batched warm-up run (which also
     absorbs kernel compilation) and the timed batched run must both
@@ -131,7 +212,7 @@ def bench_batched_write(n_load: int, n_run: int, workloads=("A", "D", "F")):
     targets = [("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
                ("P-ART", PART), ("P-HOT", PHOT),
                ("P-Masstree", PMasstree), ("P-BwTree", PBwTree)]
-    print(f"# batched write path — scalar vs write_batch, Kops/s "
+    print(f"# batched write path — scalar vs write plans, Kops/s "
           f"({n_run} run ops)")
     for name, factory in targets:
         out = {}
@@ -187,8 +268,8 @@ def bench_batched_write(n_load: int, n_run: int, workloads=("A", "D", "F")):
 def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
     """Scalar vs batched read path (the Pallas probe kernels) on the
     read-dominant mixes.  Same generated op stream, same index state;
-    the batched run coalesces consecutive lookups through
-    ``lookup_batch``.  One untimed batched warmup run absorbs snapshot
+    the batched run executes read plans (read waves over the snapshot
+    probe kernels).  One untimed batched warmup run absorbs snapshot
     export + kernel compilation, mirroring a steady-state server."""
     rows = []
     targets = [("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
@@ -196,7 +277,7 @@ def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
     n_reads = 2 * n_run  # longer read stream: the section measures the
     # steady read path, so give the fixed dispatch cost something to
     # amortize over (a server's decode stream is effectively unbounded)
-    print(f"# batched read path — scalar vs lookup_batch, Kops/s "
+    print(f"# batched read path — scalar vs read plans, Kops/s "
           f"({n_reads} run ops)")
     for name, factory in targets:
         out = {}
@@ -252,6 +333,7 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
         rows.extend(bench_batched(n_load, n_run))
         rows.extend(bench_batched_scan(n_load, n_run))
         rows.extend(bench_batched_write(n_load, n_run))
+        rows.extend(bench_mixed_plan(n_load, n_run))
     return rows
 
 

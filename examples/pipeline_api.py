@@ -1,0 +1,69 @@
+"""The public operation-plan API in two minutes.
+
+Opens converted indexes through the ``repro.api`` facade, pipelines a
+mixed read/write/scan stream (the conflict-wave scheduler batches
+everything that commutes), crashes the machine mid-plan, and shows
+plan-prefix-consistent recovery.
+
+    PYTHONPATH=src python examples/pipeline_api.py
+"""
+
+import numpy as np
+
+from repro.api import Plan, open_index
+from repro.core import CrashPoint
+
+
+def main() -> None:
+    print("== a session over P-CLHT, scalar ops are single-op plans ==")
+    s = open_index("clht", n_buckets=256)
+    s.put(1, 10)
+    print(f"  get(1) = {s.get(1)},  get(2) = {s.get(2)}")
+
+    print("\n== pipeline: mixed stream, drained as conflict-free waves ==")
+    rng = np.random.default_rng(0)
+    keys = [int(k) for k in np.unique(rng.integers(1, 1 << 40, size=500))]
+    with s.pipeline() as p:
+        handles = [p.put(k, k + 1) for k in keys]
+        reads = [p.get(k) for k in keys[:100]]
+        print(f"  first read (drains the pipeline): {reads[0].value}")
+    assert all(h.value for h in handles)
+    print(f"  session stats: {s.stats['plans']} plans, "
+          f"{s.stats['waves']} waves over {s.stats['wave_ops']} ops")
+
+    print("\n== explicit plan with a same-key RMW chain ==")
+    t = open_index("masstree")
+    plan = Plan()
+    plan.put(7, 70)
+    plan.get(7)
+    plan.update(7, 71)
+    plan.get(7)
+    plan.scan(1, 5)
+    res = t.execute(plan)
+    print(f"  results: {res.results}")
+    print(f"  waves: {res.n_waves} ({res.wave_kinds}) — per-key program "
+          f"order forced the alternation")
+
+    print("\n== crash mid-plan: plan-prefix consistency ==")
+    for k in keys[:50]:
+        t.put(k, k)
+    big = Plan()
+    for k in keys[:50]:
+        big.update(k, k + 1000)
+    t.pmem.arm_crash(after_stores=20)  # power-fail inside a write wave
+    try:
+        t.execute(big)
+    except CrashPoint:
+        print("  ☠ crashed inside a write wave")
+    t.crash()  # powerfail + RECIPE recovery (no repair pass)
+    vals = [t.get(k) for k in keys[:50]]
+    assert all(v in (k, k + 1000) for k, v in zip(keys[:50], vals))
+    n_new = sum(v == k + 1000 for k, v in zip(keys[:50], vals))
+    print(f"  every key is old-or-new, never torn "
+          f"({n_new}/50 updates landed before the cut)")
+    print(f"  the un-acked group is gone, new writes work: "
+          f"{t.put(999999, 1)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""``repro.api`` — the public facade over the RECIPE reproduction.
+
+One import gives the whole supported surface::
+
+    from repro.api import open_index, Plan
+
+    s = open_index("clht", n_buckets=256)
+    s.put(1, 10)
+    with s.pipeline() as p:
+        p.put(2, 20)
+        h = p.get(2)
+        rows = p.scan(1, 10) if s.ordered else None
+        print(h.value)          # drains the pipeline: one plan
+
+Everything routes through operation plans and the conflict-wave
+scheduler (``core/plan.py``); see docs/API.md for the ordering
+semantics and the migration table from the pre-plan ``*_batch``
+protocols.
+"""
+
+from ..core import Op, OpKind, Plan, PlanResult, Wave, schedule_waves
+from .session import OpHandle, Pipeline, Session, open_index
+
+__all__ = ["Op", "OpHandle", "OpKind", "Pipeline", "Plan", "PlanResult",
+           "Session", "Wave", "open_index", "schedule_waves"]

@@ -7,6 +7,7 @@ from .pmem import (CACHELINE_BYTES, WORD_BYTES, WORDS_PER_LINE, CrashPoint,
 from .conditions import (CONVERSION_TABLE, Condition, ConversionSpec,
                          IndexSnapshot, RecipeIndex, crash_detect_fix,
                          register)
+from .plan import Op, OpKind, Plan, PlanResult, Wave, schedule_waves
 from .arena import Arena
 from .clht import PCLHT
 from .art import PART
@@ -21,6 +22,7 @@ __all__ = [
     "DeadlockError", "NULL", "OpCounters", "PMem", "Region", "measure_op",
     "CONVERSION_TABLE", "Condition", "ConversionSpec", "IndexSnapshot",
     "RecipeIndex",
+    "Op", "OpKind", "Plan", "PlanResult", "Wave", "schedule_waves",
     "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
     "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
     "audit_durability", "run_crash_sweep",

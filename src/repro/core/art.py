@@ -517,7 +517,7 @@ class PART(RecipeIndex):
         return False
 
     # ------------------------------------------------------------------
-    # sharded batched writes (write_batch shard runs)
+    # sharded batched writes (_write_batch wave shard runs)
     # ------------------------------------------------------------------
     def _apply_shard_run(self, ops, positions, results) -> None:
         """Radix shard-run fast path: an iterative bulk-load descent

@@ -376,7 +376,7 @@ class PBwTree(RecipeIndex):
             # CAS failed → abort and restart from the root (paper §6.3)
 
     # ------------------------------------------------------------------
-    # sharded batched writes (write_batch shard runs)
+    # sharded batched writes (_write_batch wave shard runs)
     # ------------------------------------------------------------------
     def _apply_shard_run(self, ops, positions, results) -> None:
         """Consolidating group commit — the Bw-tree-native batch write.

@@ -253,7 +253,7 @@ class PCLHT(RecipeIndex):
             self.pmem.unlock_shared(self.super, 0)
 
     # ------------------------------------------------------------------
-    # sharded batched writes (write_batch shard runs)
+    # sharded batched writes (_write_batch wave shard runs)
     # ------------------------------------------------------------------
     def _apply_shard_run(self, ops: Sequence[Tuple[str, int, int]],
                          positions: Sequence[int], results: List) -> None:

@@ -58,7 +58,7 @@ class IndexSnapshot:
     refinement: ``shard_epochs`` records the per-shard write epochs at
     export time, and point lookups whose keys route to shards untouched
     since then may still be served (``_shard_refine``) — a sharded
-    ``write_batch`` invalidates only the shards it wrote.
+    ``_write_batch`` wave invalidates only the shards it wrote.
     """
 
     epoch: Tuple[int, int, int]
@@ -81,7 +81,7 @@ class RecipeIndex:
     recovery logic; recovery only reinitializes volatile lock state,
     which ``PMem.crash`` already does.
 
-    The batched read path (``snapshot``/``lookup_batch``) layers on
+    The batched read path (``snapshot``/``_lookup_batch``) layers on
     top: an index may export its reachable state as dense arrays once
     per *epoch* and answer whole batches of lookups against them with a
     vectorized kernel.  Writers bump the epoch (``_bump_epoch``) so a
@@ -108,7 +108,7 @@ class RecipeIndex:
         # per-op scoped bump at Python-int cost)
         self._shard_epochs = [0] * self.N_WRITE_SHARDS
         self._all_bump = 0
-        self._shard_scope: Optional[int] = None  # write_batch targeting
+        self._shard_scope: Optional[int] = None  # _write_batch targeting
         # stores attributable to this index's own (shard-tracked)
         # writes.  Indexes set _region_prefixes so the account covers
         # exactly their named regions: stores to *other* structures on
@@ -118,6 +118,28 @@ class RecipeIndex:
         self._region_prefixes: Tuple[str, ...] = ()
         self._accounted_stores = pmem.counters.stores
         self.shard_stats = {"refined_batches": 0, "refined_queries": 0}
+
+    # -- the one batched entry point: operation plans ---------------------
+    def execute(self, plan, *, force_kernel: bool = False,
+                collect_results: bool = True):
+        """Execute an operation ``Plan`` (mixed GET/PUT/UPDATE/DELETE/
+        SCAN); returns a ``PlanResult`` whose slot ``i`` is positionally
+        identical to applying op ``i`` with the scalar methods in
+        program order.  The conflict-wave scheduler (``core.plan``,
+        kernels/conflict) partitions the plan into maximal conflict-free
+        waves — per-key program order is preserved, independent keys
+        are free to batch — and each wave runs as one batched
+        lookup/scan dispatch or one sharded group-commit write epoch
+        (``_lookup_batch``/``_scan_batch``/``_write_batch``, the
+        private per-wave primitives).  Single-op plans degenerate to
+        the scalar path.  A crash mid-plan leaves a plan-prefix-
+        consistent image: waves commit in level order and a key's ops
+        within a wave share one group-commit epoch.
+        ``collect_results=False`` skips per-op result slots (tallies
+        stay exact) for tally-only drivers."""
+        from .plan import run_plan
+        return run_plan(self, plan, force_kernel=force_kernel,
+                        collect_results=collect_results)
 
     # -- the five-operation interface of §2.1 ---------------------------
     def insert(self, key: int, value: int) -> bool:
@@ -155,7 +177,7 @@ class RecipeIndex:
         """Writers call this on insert/delete/SMO so stale snapshots are
         never served to batched readers.  Scalar writers (no shard
         scope) conservatively invalidate every shard and drop the
-        memoized snapshot; inside ``write_batch`` only the scoped shard
+        memoized snapshot; inside ``_write_batch`` only the scoped shard
         is bumped and the snapshot object is kept — still never served
         whole (the coarse epoch key has moved), but point lookups in
         untouched shards may be refined against it."""
@@ -233,9 +255,11 @@ class RecipeIndex:
             kind, key, value = ops[pos]
             results[pos] = self._apply_write(kind, int(key), int(value))
 
-    def write_batch(self, ops: Sequence[Tuple[str, int, int]], *,
-                    group_commit: bool = True) -> List:
-        """Apply a mixed batch of ``(kind, key, value)`` write ops
+    def _write_batch(self, ops: Sequence[Tuple[str, int, int]], *,
+                     group_commit: bool = True) -> List:
+        """Per-wave write primitive (private: callers outside core go
+        through ``execute``).  Apply a mixed batch of ``(kind, key,
+        value)`` write ops
         (kind in insert/update/delete; value ignored for deletes),
         partitioned by shard.  Results are positionally identical to
         applying the ops one at a time with ``insert``/``update``/
@@ -313,14 +337,15 @@ class RecipeIndex:
                        ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Vectorized probe of a snapshot: (found [Q] bool, values [Q]
         int64), or None for an empty structure.  Kernel-backed indexes
-        implement this; the base raises so ``lookup_batch`` stays on
+        implement this; the base raises so ``_lookup_batch`` stays on
         the scalar path."""
         raise NotImplementedError
 
-    def lookup_batch(self, keys: Sequence[int], *,
-                     force_kernel: bool = False) -> List[Optional[int]]:
-        """Batched point lookups; results are bit-identical to calling
-        ``lookup`` once per key.
+    def _lookup_batch(self, keys: Sequence[int], *,
+                      force_kernel: bool = False) -> List[Optional[int]]:
+        """Per-wave read primitive (private: callers outside core go
+        through ``execute``).  Batched point lookups; results are
+        bit-identical to calling ``lookup`` once per key.
 
         Dispatch is adaptive: batches below ``_MIN_KERNEL_BATCH`` — or,
         when the snapshot is stale (a write happened), below the
@@ -423,7 +448,7 @@ class RecipeIndex:
         """Vectorized range scans of a snapshot, or None for an empty
         structure.  Ordered indexes share one implementation: binary
         search + window gather over the sorted run from _scan_export
-        (kernels/scan).  Unordered indexes raise so ``scan_batch``
+        (kernels/scan).  Unordered indexes raise so ``_scan_batch``
         stays on the scalar path (which raises in turn)."""
         if not self.ORDERED:
             raise NotImplementedError(f"{self.spec.name} is unordered")
@@ -431,13 +456,14 @@ class RecipeIndex:
         return snapshot_scan(snapshot, starts, counts,
                              lambda: self._scan_export(snapshot))
 
-    def scan_batch(self, start_keys: Sequence[int],
-                   counts: Sequence[int], *, force_kernel: bool = False
-                   ) -> List[List[Tuple[int, int]]]:
-        """Batched range scans; results are bit-identical to calling
-        ``scan`` once per (start_key, count).
+    def _scan_batch(self, start_keys: Sequence[int],
+                    counts: Sequence[int], *, force_kernel: bool = False
+                    ) -> List[List[Tuple[int, int]]]:
+        """Per-wave scan primitive (private: callers outside core go
+        through ``execute``).  Batched range scans; results are
+        bit-identical to calling ``scan`` once per (start_key, count).
 
-        Dispatch mirrors ``lookup_batch`` with one twist: the floors
+        Dispatch mirrors ``_lookup_batch`` with one twist: the floors
         compare against the *total records requested* (sum of counts),
         the unit the export cost actually amortizes over — a 64-scan
         batch probing 100 records each is kernel-worthy even though 64

@@ -321,7 +321,7 @@ class PHOT(RecipeIndex):
                 self._release(parent)
 
     # ------------------------------------------------------------------
-    # sharded batched writes (write_batch shard runs)
+    # sharded batched writes (_write_batch wave shard runs)
     # ------------------------------------------------------------------
     def _apply_shard_run(self, ops, positions, results) -> None:
         """Trie shard-run fast path: an iterative bulk-load descent

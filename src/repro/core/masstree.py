@@ -297,7 +297,7 @@ class PMasstree(RecipeIndex):
                 a.unlock(leaf)
 
     # ------------------------------------------------------------------
-    # sharded batched writes (write_batch shard runs)
+    # sharded batched writes (_write_batch wave shard runs)
     # ------------------------------------------------------------------
     def _apply_shard_run(self, ops, positions, results) -> None:
         """Leaf-group commit: the shard is a contiguous key range

@@ -117,22 +117,25 @@ def string_keyspace(keys: Sequence[int]) -> List[int]:
 class PhaseExecutor:
     """Executes a workload phase against an index.
 
-    The batched mode coalesces every protocol: consecutive lookups
-    into one ``lookup_batch`` dispatch, consecutive scans into one
-    ``scan_batch`` dispatch, and — new with the sharded write path —
-    inserts/updates/deletes into ``write_batch`` dispatches (partition
-    by shard + one group-commit persist epoch per shard run).
+    The batched mode is **plan construction**: the op stream is
+    converted to parallel kind/key/aux arrays with no per-op branching,
+    chunked into operation plans of ``max_batch`` ops, and each plan
+    runs through ``index.execute`` — the conflict-wave scheduler
+    preserves per-key program order while letting everything else batch
+    across the read/write boundary, so the mixed YCSB mixes (A/B/D/F)
+    run fully batched instead of flushing on the first key collision.
+    Op results, found counts, and scanned-record counts match the
+    scalar execution exactly (asserted in ``benchmarks/ycsb.py`` and
+    ``tests/test_write_batch.py``).
 
-    Buffered reads and buffered writes may slide past each other only
-    when they cannot observe each other, so every op still sees exactly
-    the state the scalar execution would show it: a lookup of a key
-    with a buffered write flushes the write buffer first; a write of a
-    key with a buffered lookup flushes the read buffer; scans — whose
-    windows are unknown until executed — always flush the write buffer
-    and are flushed by any write.  Everything that remains buffered
-    together commutes, so op results, found counts, and scanned-record
-    counts match the scalar execution exactly (asserted in
-    ``benchmarks/ycsb.py`` and ``tests/test_write_batch.py``).
+    ``buffered=True`` keeps the pre-plan buffer-and-flush engine (one
+    buffer per protocol, flushed on the first cross-buffer key
+    conflict) as the measured baseline for ``benchmarks/ycsb.
+    bench_mixed_plan``.  Its historical double-flush is fixed here:
+    scans and lookups are both reads and never conflict — back-to-back
+    scans over identical start keys share a buffer, and a scan no
+    longer dumps the read buffer (nor a lookup the scan buffer); only
+    writes still fence both.
 
     Scans execute as "first ``aux`` live records from ``key``"
     (``index.scan``) — real YCSB-E semantics, identical on the scalar
@@ -140,23 +143,62 @@ class PhaseExecutor:
     """
 
     def __init__(self, index, *, batch_lookups: bool = False,
-                 max_batch: int = 4096):
+                 max_batch: int = 4096, buffered: bool = False):
         self.index = index
         self.batch_lookups = batch_lookups
         self.max_batch = max_batch
+        self.buffered = buffered
         self.done = {"insert": 0, "update": 0, "delete": 0, "lookup": 0,
                      "scan": 0, "found": 0, "scanned": 0, "acked": 0,
-                     "batches": 0, "scan_batches": 0, "write_batches": 0}
+                     "batches": 0, "scan_batches": 0, "write_batches": 0,
+                     "plans": 0, "waves": 0, "wave_ops": 0}
         self._pending: List[int] = []
         self._pending_keys: set = set()
         self._pending_scans: List[Tuple[int, int]] = []
         self._pending_writes: List[Op] = []
         self._pending_write_keys: set = set()
 
+    # -- plan mode (the default batched path) -----------------------------
+    def _run_plans(self, ops: Sequence[Op]) -> dict:
+        from .plan import DELETE, GET, PUT, Plan, SCAN, UPDATE
+        code = {"lookup": GET, "insert": PUT, "update": UPDATE,
+                "delete": DELETE, "scan": SCAN}
+        n = len(ops)
+        kinds = np.fromiter((code[k] for k, _, _ in ops), np.int32, n)
+        keys = np.fromiter((k for _, k, _ in ops), np.int64, n)
+        aux = np.fromiter((a for _, _, a in ops), np.int64, n)
+        done = self.done
+        cnt = np.bincount(kinds, minlength=5)
+        done["lookup"] += int(cnt[GET])
+        done["insert"] += int(cnt[PUT])
+        done["update"] += int(cnt[UPDATE])
+        done["delete"] += int(cnt[DELETE])
+        done["scan"] += int(cnt[SCAN])
+        mb = self.max_batch
+        for lo in range(0, n, mb):
+            plan = Plan.from_arrays(kinds[lo:lo + mb], keys[lo:lo + mb],
+                                    aux[lo:lo + mb])
+            res = self.index.execute(plan, collect_results=False)
+            done["found"] += res.found
+            done["acked"] += res.acked
+            done["scanned"] += res.scanned
+            done["plans"] += 1
+            done["waves"] += res.n_waves
+            for wkind, width in zip(res.wave_kinds, res.wave_widths):
+                done["wave_ops"] += width
+                if wkind == "read":
+                    done["batches"] += 1
+                elif wkind == "scan":
+                    done["scan_batches"] += 1
+                else:
+                    done["write_batches"] += 1
+        return done
+
+    # -- buffered legacy mode (the PR-4 baseline) -------------------------
     def _flush_lookups(self) -> None:
         if not self._pending:
             return
-        results = self.index.lookup_batch(self._pending)
+        results = self.index._lookup_batch(self._pending)
         self.done["lookup"] += len(self._pending)
         self.done["found"] += sum(r is not None for r in results)
         self.done["batches"] += 1
@@ -168,7 +210,7 @@ class PhaseExecutor:
             return
         starts = [s for s, _ in self._pending_scans]
         counts = [c for _, c in self._pending_scans]
-        results = self.index.scan_batch(starts, counts)
+        results = self.index._scan_batch(starts, counts)
         self.done["scan"] += len(starts)
         self.done["scanned"] += sum(len(r) for r in results)
         self.done["scan_batches"] += 1
@@ -177,7 +219,7 @@ class PhaseExecutor:
     def _flush_writes(self) -> None:
         if not self._pending_writes:
             return
-        results = self.index.write_batch(self._pending_writes)
+        results = self.index._write_batch(self._pending_writes)
         done = self.done
         for kind, _, _ in self._pending_writes:
             done[kind] += 1
@@ -191,69 +233,75 @@ class PhaseExecutor:
         self._flush_scans()
         self._flush_writes()
 
-    def run(self, ops: Sequence[Op]) -> dict:
+    def _run_buffered(self, ops: Sequence[Op]) -> dict:
         done = self.done
-        batching = self.batch_lookups
         pending, max_batch = self._pending, self.max_batch
         pending_keys = self._pending_keys
         pending_scans = self._pending_scans
         pending_writes = self._pending_writes
         pending_write_keys = self._pending_write_keys
+        for kind, key, aux in ops:
+            if kind == "lookup":
+                if key in pending_write_keys:
+                    self._flush_writes()  # must observe that write
+                pending.append(key)
+                pending_keys.add(key)
+                if len(pending) >= max_batch:
+                    self._flush_lookups()
+            elif kind == "scan":
+                self._flush_writes()  # a scan may observe any write
+                pending_scans.append((key, aux))
+                if len(pending_scans) >= max_batch:
+                    self._flush_scans()
+            else:  # insert / update / delete
+                self._flush_scans()  # buffered scans precede this write
+                if key in pending_keys:
+                    self._flush_lookups()  # those reads precede it too
+                pending_writes.append((kind, key, aux))
+                pending_write_keys.add(key)
+                if len(pending_writes) >= max_batch:
+                    self._flush_writes()
+        self._flush()
+        return done
+
+    def run(self, ops: Sequence[Op]) -> dict:
+        if self.batch_lookups:
+            if self.buffered:
+                return self._run_buffered(ops)
+            return self._run_plans(ops)
+        done = self.done
         index, lookup = self.index, self.index.lookup
         for kind, key, aux in ops:
             if kind == "lookup":
-                if batching:
-                    self._flush_scans()
-                    if key in pending_write_keys:
-                        self._flush_writes()  # must observe that write
-                    pending.append(key)
-                    pending_keys.add(key)
-                    if len(pending) >= max_batch:
-                        self._flush_lookups()
-                else:
-                    if lookup(key) is not None:
-                        done["found"] += 1
-                    done["lookup"] += 1
+                if lookup(key) is not None:
+                    done["found"] += 1
+                done["lookup"] += 1
             elif kind == "scan":
-                if batching:
-                    self._flush_lookups()
-                    self._flush_writes()  # a scan may observe any write
-                    pending_scans.append((key, aux))
-                    if len(pending_scans) >= max_batch:
-                        self._flush_scans()
+                done["scanned"] += len(index.scan(key, aux))
+                done["scan"] += 1
+            else:
+                if kind == "insert":
+                    r = index.insert(key, aux)
+                elif kind == "update":
+                    r = index.update(key, aux)
                 else:
-                    done["scanned"] += len(index.scan(key, aux))
-                    done["scan"] += 1
-            else:  # insert / update / delete
-                if batching:
-                    self._flush_scans()  # buffered scans precede this write
-                    if key in pending_keys:
-                        self._flush_lookups()  # those reads precede it too
-                    pending_writes.append((kind, key, aux))
-                    pending_write_keys.add(key)
-                    if len(pending_writes) >= max_batch:
-                        self._flush_writes()
-                else:
-                    if kind == "insert":
-                        r = index.insert(key, aux)
-                    elif kind == "update":
-                        r = index.update(key, aux)
-                    else:
-                        r = index.delete(key)
-                    done["acked"] += bool(r)
-                    done[kind] += 1
-        self._flush()
+                    r = index.delete(key)
+                done["acked"] += bool(r)
+                done[kind] += 1
         return done
 
 
 def run_workload(index, wl: Workload, *, phase: str = "run",
-                 batch_lookups: bool = False, max_batch: int = 4096) -> dict:
+                 batch_lookups: bool = False, max_batch: int = 4096,
+                 buffered: bool = False) -> dict:
     """Execute a phase; returns op counts (throughput measured by caller).
-    With ``batch_lookups`` consecutive reads dispatch through the
-    index's ``lookup_batch``/``scan_batch`` (the Pallas probe and scan
-    kernels) and writes coalesce into ``write_batch`` (shard partition
-    + group commit), for all five converted indexes."""
+    With ``batch_lookups`` the op stream runs as operation plans of
+    ``max_batch`` ops through ``index.execute`` — conflict-wave
+    scheduling over the Pallas probe/scan kernels and the sharded
+    group-commit write path, for all five converted indexes.
+    ``buffered`` selects the pre-plan buffer-and-flush baseline
+    instead (benchmark honesty comparisons only)."""
     ops = wl.load_ops if phase == "load" else wl.run_ops
     ex = PhaseExecutor(index, batch_lookups=batch_lookups,
-                       max_batch=max_batch)
+                       max_batch=max_batch, buffered=buffered)
     return ex.run(ops)

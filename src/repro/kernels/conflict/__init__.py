@@ -1,0 +1,11 @@
+"""Plan-conflict detection for the wave scheduler: vectorized
+same-key / overlapping-range conflict tests between plan ops, plus the
+O(n²) peeling oracle for wave levels.  See README.md for the rules."""
+
+from .ops import (DELETE, GET, PUT, SCAN, UPDATE, conflict_any,
+                  conflict_any_ref, conflict_matrix_ref, is_write_kind,
+                  wave_levels_ref)
+
+__all__ = ["DELETE", "GET", "PUT", "SCAN", "UPDATE", "conflict_any",
+           "conflict_any_ref", "conflict_matrix_ref", "is_write_kind",
+           "wave_levels_ref"]

@@ -13,24 +13,28 @@ metadata plane is built from RECIPE-converted indexes.
 * **Allocator** — free list persisted as a bitmap region; allocation
   commit = single atomic word store (bit set), GC reconciles leaks.
 
-Reads ride the batched execution layer: every decode tick resolves all
-running sequences' page translations in ONE probe of the block table's
-epoch-cached snapshot (kernels/clht_probe), and prefix matching probes
-all block hashes of a prompt in one P-ART descent (kernels/art_probe).
-The decode hot path issues zero scalar ``lookup`` calls — writes
-(grants, admissions) bump the index epoch and the next tick re-exports.
-Restart recovery ends with a prefix-range warmup: one batched
-``scan_batch`` sweep (kernels/scan) enumerates the surviving prefix
-cache and leaves its snapshot warm for the first admissions.
+All index I/O goes through the operation-plan API: the engine builds
+``Plan``s and calls ``RecipeIndex.execute`` — ONE plan per request
+batch per index.  Every decode tick resolves all running sequences'
+page translations with one read plan against the block table's
+epoch-cached snapshot (kernels/clht_probe); admission gathers every
+queued request for the tick and issues one read plan for all their
+prefix probes (kernels/art_probe), one write plan for all their page
+grants, and one write plan for all their prefix ingests.  The decode
+hot path issues zero scalar ``lookup`` calls — writes (grants,
+admissions) bump the index epoch and the next tick re-exports.
+Restart recovery ends with a prefix-range warmup: batched scan plans
+(kernels/scan) enumerate the surviving prefix cache and leave its
+snapshot warm for the first admissions.
 
-Writes ride the sharded batched write layer: page grants and prefix
-admissions drain through ``write_batch`` (kernels/partition shard
-routing + one ``PMem.group_commit`` persist epoch per shard run), so
-an admission's flush/fence traffic amortizes across its grants and —
-because ``write_batch`` invalidates only the shards it wrote — prefix
-ingest no longer invalidates the whole prefix-cache snapshot: the next
-admission's prefix probe serves warm shards from the existing export
-(``RecipeIndex._shard_refine``) and walks only the dirty ones.
+Write plans land on the sharded group-commit path (kernels/partition
+shard routing + one ``PMem.group_commit`` persist epoch per shard
+run), so an admission's flush/fence traffic amortizes across its
+grants and — because a write wave invalidates only the shards it
+wrote — prefix ingest no longer invalidates the whole prefix-cache
+snapshot: the next admission's prefix probe serves warm shards from
+the existing export (``RecipeIndex._shard_refine``) and walks only
+the dirty ones.
 
 The compute plane (decode attention over the pages) is
 kernels/paged_attention; this module is the control plane and a
@@ -46,7 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import PART, PCLHT, PMem
+from ..core import PART, PCLHT, PMem, Plan
 
 _M64 = (1 << 64) - 1
 
@@ -105,13 +109,23 @@ class PagedKVManager:
         self.table.insert(self._bt_key(seq_id, logical), physical + 1)
 
     def map_pages(self, seq_id: int, grants: List[Tuple[int, int]]) -> None:
-        """Commit many ``(logical, physical)`` grants in one sharded
-        ``write_batch`` — one group-commit persist epoch per touched
-        shard instead of a flush+fence pair per grant."""
-        if not grants:
-            return
-        self.table.write_batch([("insert", self._bt_key(seq_id, l), p + 1)
-                                for l, p in grants])
+        """Commit many ``(logical, physical)`` grants in one write plan
+        — one group-commit persist epoch per touched shard instead of
+        a flush+fence pair per grant."""
+        self.map_pages_many([(seq_id, grants)])
+
+    def map_pages_many(self, by_seq: List[Tuple[int, List[Tuple[int, int]]]]
+                       ) -> None:
+        """One write plan for a whole admission batch's grants: every
+        ``(seq_id, [(logical, physical), ...])`` commits together —
+        block-table keys are unique per (seq, logical), so the plan is
+        a single conflict-free write wave."""
+        plan = Plan()
+        for seq_id, grants in by_seq:
+            for l, p in grants:
+                plan.put(self._bt_key(seq_id, l), p + 1)
+        if len(plan):
+            self.table.execute(plan, collect_results=False)
 
     def lookup_page(self, seq_id: int, logical: int) -> Optional[int]:
         v = self.table.lookup(self._bt_key(seq_id, logical))
@@ -128,9 +142,10 @@ class PagedKVManager:
         or go scalar instead of re-exporting per admission."""
         if not pairs:
             return []
-        res = self.table.lookup_batch(
-            [self._bt_key(s, l) for s, l in pairs],
-            force_kernel=force_kernel)
+        plan = Plan()
+        for s, l in pairs:
+            plan.get(self._bt_key(s, l))
+        res = self.table.execute(plan, force_kernel=force_kernel).results
         return [None if v is None else v - 1 for v in res]
 
     def release_seq(self, seq_id: int, n_logical: int) -> None:
@@ -139,10 +154,12 @@ class PagedKVManager:
         are elided, so untouched shards keep their snapshot epochs)."""
         pairs = [(seq_id, l) for l in range(n_logical)]
         phys = self.lookup_pages_batch(pairs, force_kernel=False)
-        ops = [("delete", self._bt_key(seq_id, l), 0)
-               for (_, l), p in zip(pairs, phys) if p is not None]
-        if ops:
-            self.table.write_batch(ops)
+        plan = Plan()
+        for (_, l), p in zip(pairs, phys):
+            if p is not None:
+                plan.delete(self._bt_key(seq_id, l))
+        if len(plan):
+            self.table.execute(plan, collect_results=False)
         for p in phys:
             if p is not None:
                 self.free_page(p)
@@ -159,42 +176,88 @@ class PagedKVManager:
         return out
 
     def prefix_lookup(self, tokens: List[int]) -> Tuple[int, List[int]]:
-        """Longest cached prefix: returns (n_tokens_covered, page_ids).
-        All block hashes go through one batched P-ART probe; the match
-        still ends at the first miss, exactly as the scalar walk did.
-        This runs at admission (prefill), right after prefix_insert
+        """Longest cached prefix: returns (n_tokens_covered, page_ids)."""
+        return self.prefix_lookup_many([tokens])[0]
+
+    def prefix_lookup_many(self, prompts: List[List[int]], *,
+                           assume_batch_ingest: bool = False
+                           ) -> List[Tuple[int, List[Optional[int]]]]:
+        """Longest cached prefixes for a whole admission batch through
+        ONE read plan on the P-ART prefix cache; each prompt's match
+        still ends at its first miss, exactly as the scalar walk did.
+        This runs at admission (prefill), right after prefix ingest
         bumped the epoch — so adaptive dispatch is left on: forcing the
         kernel here would re-export the whole tree for a handful of
-        hashes every admission."""
-        hashes = self._block_hashes(tokens)
-        if not hashes:
-            return 0, []
-        pages, covered = [], 0
-        for page in self.prefix.lookup_batch(hashes):
-            if page is None:
-                break
-            pages.append(page - 1)
-            covered += self.page_size
-        return covered, pages
+        hashes every admission.
 
-    def prefix_insert(self, tokens: List[int], pages: List[int]) -> int:
-        """Ingest the prompt's whole-block hashes through one sharded
-        ``write_batch``: the prefix cache's snapshot is invalidated only
-        in the shards the new hashes route to, so the next admission's
-        prefix probe still serves every warm shard from the existing
-        export.  Returns the number of blocks ingested."""
-        h = 0
-        ps = self.page_size
-        ops: List[Tuple[str, int, int]] = []
+        ``assume_batch_ingest`` gives sequential-admission hit
+        semantics to a batched admission: every prompt ingests all its
+        whole-block hashes, so a later prompt's walk also counts a
+        block warm when an earlier prompt in this call is about to
+        ingest it.  Such chain-hit blocks have no page yet — their
+        page slots are ``None``."""
+        all_hashes = [self._block_hashes(t) for t in prompts]
+        plan = Plan()
+        for hashes in all_hashes:
+            for h in hashes:
+                plan.get(h)
+        if not len(plan):
+            return [(0, []) for _ in prompts]
+        res = self.prefix.execute(plan).results
+        out, at = [], 0
+        seen: set = set()
+        for hashes in all_hashes:
+            pages: List[Optional[int]] = []
+            covered = 0
+            for h, page in zip(hashes, res[at:at + len(hashes)]):
+                if page is not None:
+                    pages.append(page - 1)
+                elif assume_batch_ingest and h in seen:
+                    pages.append(None)
+                else:
+                    break
+                covered += self.page_size
+            at += len(hashes)
+            if assume_batch_ingest:
+                seen.update(hashes)
+            out.append((covered, pages))
+        return out
+
+    def _ingest_ops(self, tokens: List[int], pages: List[int]
+                    ) -> List[Tuple[int, int]]:
+        """(hash, page+1) rows for every whole block of a prompt."""
+        h, ps, ops = 0, self.page_size, []
         for b, page in enumerate(pages):
             blk = tokens[b * ps:(b + 1) * ps]
             if len(blk) < ps:
                 break
             h = _roll_hash(h, blk)
-            ops.append(("insert", h, page + 1))
-        if ops:
-            self.prefix.write_batch(ops)
-        return len(ops)
+            ops.append((h, page + 1))
+        return ops
+
+    def prefix_insert(self, tokens: List[int], pages: List[int]) -> int:
+        """Ingest one prompt's whole-block hashes; see
+        ``prefix_insert_many``.  Returns the number of blocks ingested."""
+        return self.prefix_insert_many([(tokens, pages)])[0]
+
+    def prefix_insert_many(self, batch: List[Tuple[List[int], List[int]]]
+                           ) -> List[int]:
+        """Ingest a whole admission batch's prefixes through ONE write
+        plan on the sharded group-commit path: the prefix cache's
+        snapshot is invalidated only in the shards the new hashes route
+        to, so the next admission's prefix probe still serves every
+        warm shard from the existing export.  Returns per-prompt block
+        counts."""
+        plan = Plan()
+        counts = []
+        for tokens, pages in batch:
+            ops = self._ingest_ops(tokens, pages)
+            for h, v in ops:
+                plan.put(h, v)
+            counts.append(len(ops))
+        if len(plan):
+            self.prefix.execute(plan, collect_results=False)
+        return counts
 
     def recover(self) -> int:
         """Post-crash: locks were reinitialized by PMem.crash; the
@@ -220,8 +283,9 @@ class PagedKVManager:
         Returns the number of warm prefix blocks found."""
         total, start = 0, 1
         while True:
-            rows = self.prefix.scan_batch([start], [chunk],
-                                          force_kernel=True)[0]
+            plan = Plan()
+            plan.scan(start, chunk)
+            rows = self.prefix.execute(plan, force_kernel=True).results[0]
             total += len(rows)
             if len(rows) < chunk:
                 return total
@@ -257,44 +321,81 @@ class Server:
         self.queue.append(Request(rid, list(prompt), max_new))
         return rid
 
-    def _prefill(self, req: Request, max_len: int) -> None:
-        covered, pages = self.kv.prefix_lookup(req.prompt)
-        self.stats["prefix_hits"] += covered
-        batch = {"tokens": jnp.asarray([req.prompt], jnp.int32),
-                 "labels": jnp.zeros((1, len(req.prompt)), jnp.int32)}
-        logits, caches = self.model.prefill(self.params, batch,
-                                            len(req.prompt))
-        self.stats["prefill_tokens"] += len(req.prompt) - covered
-        # grant pages for the prompt; all grants commit through ONE
-        # sharded write_batch per index (block table, then prefix
-        # cache) — the ingest never invalidates shards it didn't write
-        n_logical = -(-len(req.prompt) // self.page_size)
-        have = self.kv.lookup_pages_batch(
-            [(req.rid, l) for l in range(n_logical)], force_kernel=False)
-        granted, grants = [], []
-        for l, p in enumerate(have):
-            if p is None:
-                p = self.kv.alloc_page()
+    def _admit(self, reqs: List[Request], max_len: int) -> List[Request]:
+        """Admit a request batch with ONE plan per index: one read
+        plan covering every request's prefix probes, one write plan
+        for all their page grants, and one write plan for all their
+        prefix ingests — admission metadata traffic no longer scales
+        per request.  Intra-batch prefix reuse keeps its sequential-
+        admission semantics (``prefix_lookup_many`` with
+        ``assume_batch_ingest``).
+
+        Admission is capacity-aware: page grants run first, and a
+        request the pool cannot fully cover frees its partial allocs
+        and returns to the queue head — its tick-mates still admit
+        (the pre-plan engine raised and dropped the whole tick).
+        Returns the requests actually admitted."""
+        pairs = [(r.rid, l) for r in reqs
+                 for l in range(-(-len(r.prompt) // self.page_size))]
+        have = self.kv.lookup_pages_batch(pairs, force_kernel=False)
+        admitted: List[Request] = []
+        requeued: List[Request] = []
+        by_seq: List[Tuple[int, List[Tuple[int, int]]]] = []
+        granted_by_rid: Dict[int, List[int]] = {}
+        at = 0
+        for req in reqs:
+            n_logical = -(-len(req.prompt) // self.page_size)
+            granted, grants = [], []
+            for l, p in enumerate(have[at:at + n_logical]):
                 if p is None:
-                    raise MemoryError("KV page pool exhausted")
-                grants.append((l, p))
-            granted.append(p)
-        self.kv.map_pages(req.rid, grants)
-        n_blocks = self.kv.prefix_insert(req.prompt, granted)
-        self.stats["ingest_write_batches"] += (len(grants) > 0) + (n_blocks > 0)
+                    p = self.kv.alloc_page()
+                    if p is None:
+                        break
+                    grants.append((l, p))
+                granted.append(p)
+            at += n_logical
+            if len(granted) < n_logical:  # pool exhausted mid-request
+                for _, p in grants:
+                    self.kv.free_page(p)
+                requeued.append(req)
+                continue
+            admitted.append(req)
+            by_seq.append((req.rid, grants))
+            granted_by_rid[req.rid] = granted
+        if requeued:
+            self.queue[:0] = requeued
+        if not admitted:
+            return []
+        matches = self.kv.prefix_lookup_many(
+            [r.prompt for r in admitted], assume_batch_ingest=True)
+        # per-request compute prefill + dense cache padding
+        for req, (covered, _pages) in zip(admitted, matches):
+            self.stats["prefix_hits"] += covered
+            batch = {"tokens": jnp.asarray([req.prompt], jnp.int32),
+                     "labels": jnp.zeros((1, len(req.prompt)), jnp.int32)}
+            logits, caches = self.model.prefill(self.params, batch,
+                                                len(req.prompt))
+            self.stats["prefill_tokens"] += len(req.prompt) - covered
+
+            def pad(c, n=len(req.prompt)):
+                if c.ndim >= 3 and c.shape[-3] == n:
+                    widths = [(0, 0)] * c.ndim
+                    widths[-3] = (0, max_len - n)
+                    return jnp.pad(c, widths)
+                return c
+            self.caches[req.rid] = jax.tree.map(pad, caches)
+            req.pos = len(req.prompt)
+            req.out.append(int(jnp.argmax(logits[0])))
+        # one write plan per index for the whole admission
+        self.kv.map_pages_many(by_seq)
+        n_blocks = self.kv.prefix_insert_many(
+            [(r.prompt, granted_by_rid[r.rid]) for r in admitted])
+        n_grants = sum(len(g) for _, g in by_seq)
+        self.stats["ingest_write_batches"] += (n_grants > 0) + \
+            (sum(n_blocks) > 0)
         self.stats["prefix_shard_refined"] = \
             self.kv.prefix.shard_stats["refined_queries"]
-        # pad dense compute cache to max_len
-        def pad(c):
-            if c.ndim >= 3 and c.shape[-3] == len(req.prompt):
-                widths = [(0, 0)] * c.ndim
-                widths[-3] = (0, max_len - len(req.prompt))
-                return jnp.pad(c, widths)
-            return c
-        self.caches[req.rid] = jax.tree.map(pad, caches)
-        req.pos = len(req.prompt)
-        tok = int(jnp.argmax(logits[0]))
-        req.out.append(tok)
+        return admitted
 
     def _resolve_page_tables(self) -> None:
         """Translate every running sequence's logical pages in ONE
@@ -313,11 +414,14 @@ class Server:
         self.stats["translation_batches"] += 1
 
     def step(self, max_len: int = 128) -> None:
-        """One scheduler tick: admit + decode one token for all running."""
-        while self.queue and len(self.running) < self.max_batch:
-            req = self.queue.pop(0)
-            self._prefill(req, max_len)
-            self.running.append(req)
+        """One scheduler tick: admit + decode one token for all running.
+        Admission drains the queue up to the batch limit and commits
+        the whole admission's metadata with one plan per index."""
+        admits: List[Request] = []
+        while self.queue and len(self.running) + len(admits) < self.max_batch:
+            admits.append(self.queue.pop(0))
+        if admits:
+            self.running.extend(self._admit(admits, max_len))
         if self.running:
             self._resolve_page_tables()
         finished = []

@@ -30,7 +30,7 @@ def _keys(n, hi=1 << 60):
 def _assert_identical(idx, probe, force=False):
     scalar = [idx.lookup(int(k)) for k in probe]
     kwargs = {"force_kernel": True} if force else {}
-    batched = idx.lookup_batch(probe, **kwargs)
+    batched = idx._lookup_batch(probe, **kwargs)
     assert scalar == batched, [
         (k, s, b) for k, s, b in zip(probe, scalar, batched) if s != b][:5]
 
@@ -63,7 +63,7 @@ def test_batched_equals_scalar_post_crash(name, factory):
     keys = _keys(400)
     for k in keys:
         idx.insert(k, (k % 99991) + 1)
-    idx.lookup_batch(keys, force_kernel=True)  # build a pre-crash snapshot
+    idx._lookup_batch(keys, force_kernel=True)  # build a pre-crash snapshot
     pmem.crash(mode="powerfail")
     # the stale pre-crash snapshot must not be served
     _assert_identical(idx, keys + _keys(100), force=True)
@@ -106,10 +106,10 @@ def test_batched_ycsb_found_counts_match(name, factory, wl_name):
 @pytest.mark.parametrize("name,factory", FACTORIES)
 def test_batched_empty_and_tiny(name, factory):
     idx = factory(PMem())
-    assert idx.lookup_batch([]) == []
-    assert idx.lookup_batch([5, 7], force_kernel=True) == [None, None]
+    assert idx._lookup_batch([]) == []
+    assert idx._lookup_batch([5, 7], force_kernel=True) == [None, None]
     idx.insert(5, 55)
-    assert idx.lookup_batch([5, 7], force_kernel=True) == [55, None]
+    assert idx._lookup_batch([5, 7], force_kernel=True) == [55, None]
 
 
 def test_snapshot_epoch_invalidation_unit():
@@ -136,8 +136,8 @@ def test_scalar_fallback_for_indexes_without_export():
     keys = _keys(40)
     for k in keys:
         idx.insert(k, k % 1000 + 1)
-    assert idx.lookup_batch(keys) == [idx.lookup(k) for k in keys]
-    assert idx.lookup_batch(keys, force_kernel=True) == \
+    assert idx._lookup_batch(keys) == [idx.lookup(k) for k in keys]
+    assert idx._lookup_batch(keys, force_kernel=True) == \
         [idx.lookup(k) for k in keys]
 
 
@@ -149,5 +149,5 @@ def test_values_above_32_bits_roundtrip(name, factory):
     for i, k in enumerate(_keys(64)):
         idx.insert(k, big + i)
     ks = list(idx.keys())
-    assert idx.lookup_batch(ks, force_kernel=True) == \
+    assert idx._lookup_batch(ks, force_kernel=True) == \
         [idx.lookup(k) for k in ks]

@@ -108,7 +108,7 @@ def test_single_crash_point_never_loses_acked_keys(ops, seed, data):
 @given(op_sequences(), st.booleans())
 def test_batched_lookup_bit_identical_property(ops, crash):
     """The batched execution layer: after ANY op sequence (and an
-    optional powerfail), lookup_batch over every touched key returns
+    optional powerfail), _lookup_batch over every touched key returns
     exactly what scalar lookup does — for both kernel-backed indexes."""
     probe = sorted({k for _, k, _ in ops})
     for factory in (lambda p: PCLHT(p, n_buckets=4), lambda p: PART(p)):
@@ -120,8 +120,8 @@ def test_batched_lookup_bit_identical_property(ops, crash):
             pmem.crash(mode="powerfail")
             idx.recover()
         scalar = [idx.lookup(k) for k in probe]
-        assert idx.lookup_batch(probe, force_kernel=True) == scalar
-        assert idx.lookup_batch(probe) == scalar  # adaptive path too
+        assert idx._lookup_batch(probe, force_kernel=True) == scalar
+        assert idx._lookup_batch(probe) == scalar  # adaptive path too
 
 
 @settings(max_examples=100, deadline=None)

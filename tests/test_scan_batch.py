@@ -26,14 +26,14 @@ def _keys(n, hi=1 << 60):
 
 def _assert_scans_identical(idx, starts, counts):
     scalar = [idx.scan(int(s), int(c)) for s, c in zip(starts, counts)]
-    batched = idx.scan_batch(starts, counts, force_kernel=True)
+    batched = idx._scan_batch(starts, counts, force_kernel=True)
     assert scalar == batched, [
         (s, a, b) for s, a, b in zip(starts, scalar, batched) if a != b][:3]
 
 
 def _assert_lookups_identical(idx, probe):
     scalar = [idx.lookup(int(k)) for k in probe]
-    batched = idx.lookup_batch(probe, force_kernel=True)
+    batched = idx._lookup_batch(probe, force_kernel=True)
     assert scalar == batched, [
         (k, s, b) for k, s, b in zip(probe, scalar, batched) if s != b][:5]
 
@@ -69,7 +69,7 @@ def test_scan_batch_equals_scalar_post_crash(name, factory):
     keys = _keys(300)
     for k in keys:
         idx.insert(k, (k % 99991) + 1)
-    idx.scan_batch(keys[:4], [20] * 4, force_kernel=True)  # pre-crash snapshot
+    idx._scan_batch(keys[:4], [20] * 4, force_kernel=True)  # pre-crash snapshot
     pmem.crash(mode="powerfail")
     # the stale pre-crash snapshot must not be served
     starts = keys[::9] + _keys(10)
@@ -89,8 +89,8 @@ def test_batched_equals_scalar_mid_workload_crash(name, factory):
     for k in keys[:120]:
         idx.insert(k, (k % 99991) + 1)
     # build pre-crash snapshots on both kernel paths
-    idx.lookup_batch(keys[:64], force_kernel=True)
-    idx.scan_batch(keys[:4], [25] * 4, force_kernel=True)
+    idx._lookup_batch(keys[:64], force_kernel=True)
+    idx._scan_batch(keys[:4], [25] * 4, force_kernel=True)
     snap = PMSnapshot(pmem, idx)
     victim = keys[120]
     before = pmem.counters.stores
@@ -102,7 +102,7 @@ def test_batched_equals_scalar_mid_workload_crash(name, factory):
     counts = [17] * len(starts)
     assert n_stores > 0
     for k_at in range(0, n_stores, max(1, n_stores // 5)):
-        idx.lookup_batch(probe, force_kernel=True)  # re-arm a warm snapshot
+        idx._lookup_batch(probe, force_kernel=True)  # re-arm a warm snapshot
         pmem.arm_crash(after_stores=k_at)
         try:
             idx.insert(victim, 777)
@@ -127,12 +127,12 @@ def test_epoch_invalidation_on_delete_and_smo(name, factory):
         idx.insert(k, (k % 1000003) + 1)
     s1 = idx.snapshot()
     assert idx.snapshot() is s1  # cached while clean
-    assert idx.lookup_batch([keys[0]], force_kernel=True) == \
+    assert idx._lookup_batch([keys[0]], force_kernel=True) == \
         [idx.lookup(keys[0])]
     # delete invalidates
     assert idx.delete(keys[0])
     assert idx.snapshot() is not s1
-    assert idx.lookup_batch([keys[0]], force_kernel=True) == [None]
+    assert idx._lookup_batch([keys[0]], force_kernel=True) == [None]
     # an insert burst forces splits/reorganizations (FANOUT/LEAF_CAP are
     # 15/16, so 200 inserts split many nodes); snapshots must track
     s2 = idx.snapshot()
@@ -174,10 +174,10 @@ def test_sorted_run_batches_above_kernel_block():
     for k in keys:
         idx.insert(k, (k % 99991) + 1)
     probe = (keys * 11)[:4300] + _keys(20)
-    assert idx.lookup_batch(probe, force_kernel=True) == \
+    assert idx._lookup_batch(probe, force_kernel=True) == \
         [idx.lookup(k) for k in probe]
     starts = (keys * 11)[:4200]
-    got = idx.scan_batch(starts, [2] * len(starts), force_kernel=True)
+    got = idx._scan_batch(starts, [2] * len(starts), force_kernel=True)
     expect = {s: idx.scan(s, 2) for s in set(starts)}
     assert got == [expect[s] for s in starts]
 

@@ -87,6 +87,28 @@ def test_restart_preserves_grants_and_warm_prefixes(served):
         assert pmem.load(server2.kv.bitmap, p) == 1
 
 
+def test_admission_is_capacity_aware(served):
+    """When the page pool cannot cover every queued request, the ones
+    that fit still admit; the rest return to the queue head with their
+    partial allocs freed and no compute cache installed."""
+    from repro.serving.engine import Server
+    cfg, model, params = served
+    server = Server(model, params, page_size=8, n_pages=3, pmem=PMem())
+    rng = np.random.default_rng(9)
+    r0 = server.submit([int(t) for t in rng.integers(1, cfg.vocab, 16)],
+                       max_new=8)  # needs 2 pages
+    r1 = server.submit([int(t) for t in rng.integers(1, cfg.vocab, 16)],
+                       max_new=8)  # needs 2 more — only 1 left
+    server.step(48)
+    assert [r.rid for r in server.running] == [r0]
+    assert [r.rid for r in server.queue] == [r1]
+    assert r1 not in server.caches, "requeued request leaked a KV cache"
+    # the failed grant's partial alloc was rolled back: exactly r0's
+    # two pages are held
+    held = sum(server.pmem.load(server.kv.bitmap, p) for p in range(3))
+    assert held == 2
+
+
 def test_prefix_lookup_batches_all_blocks(served):
     """prefix_lookup probes every block hash in one batched call and
     still stops covering at the first miss, like the scalar walk."""

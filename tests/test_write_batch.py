@@ -70,7 +70,7 @@ def test_write_batch_equals_scalar(name, factory):
     _apply_scalar(ia, preload)
     _apply_scalar(ib, preload)
     scalar = _apply_scalar(ia, ops)
-    batched = ib.write_batch(ops)
+    batched = ib._write_batch(ops)
     assert scalar == batched, [
         (o, s, b) for o, s, b in zip(ops, scalar, batched) if s != b][:5]
     assert sorted(ia.items()) == sorted(ib.items())
@@ -90,7 +90,7 @@ def test_write_batch_same_key_history(name, factory):
     ops = [("insert", k, 10), ("delete", k, 0), ("insert", k, 20),
            ("update", k, 30), ("update", k, 30)]
     ref = factory(PMem())
-    assert idx.write_batch(ops) == _apply_scalar(ref, ops)
+    assert idx._write_batch(ops) == _apply_scalar(ref, ops)
     assert idx.lookup(k) == 30
 
 
@@ -115,14 +115,14 @@ def test_mid_group_commit_crash_recovery(name, factory):
              + [("update", k, 999999) for k in victims[3:]])
     snap = PMSnapshot(pmem, idx)
     before = pmem.counters.stores
-    idx.write_batch(batch)
+    idx._write_batch(batch)
     n_stores = pmem.counters.stores - before
     snap.restore(pmem)
     assert n_stores > 0
     for k_at in range(0, n_stores, max(1, n_stores // 8)):
         pmem.arm_crash(after_stores=k_at)
         try:
-            idx.write_batch(batch)
+            idx._write_batch(batch)
             pmem.disarm_crash()
         except CrashPoint:
             pass
@@ -153,12 +153,12 @@ def test_untouched_shards_keep_snapshot_epochs(name, factory):
     idx = factory(PMem())
     rng = np.random.default_rng(37)
     keys = [int(k) for k in np.unique(rng.integers(1, 1 << 60, size=300))]
-    idx.write_batch([("insert", k, (k % 4093) + 1) for k in keys])
+    idx._write_batch([("insert", k, (k % 4093) + 1) for k in keys])
     snap_obj = idx.snapshot()
     before = list(idx._effective_shard_epochs())
     # write a batch confined to a few shards
     batch_keys = [int(k) for k in rng.integers(1, 1 << 56, size=12)]
-    idx.write_batch([("insert", k, 5) for k in batch_keys])
+    idx._write_batch([("insert", k, 5) for k in batch_keys])
     after = list(idx._effective_shard_epochs())
     touched = set(int(s) for s in idx.shard_route(
         np.asarray(batch_keys, np.int64)))
@@ -184,7 +184,7 @@ def test_untouched_shards_keep_snapshot_epochs(name, factory):
 
     idx.export_arrays = counting_export
     hits_before = idx.shard_stats["refined_queries"]
-    got = idx.lookup_batch(clean)
+    got = idx._lookup_batch(clean)
     assert got == [idx.lookup(k) for k in clean]
     assert calls["n"] == 0, "clean-shard batch forced a re-export"
     assert idx.shard_stats["refined_queries"] >= hits_before + len(clean)
@@ -203,7 +203,7 @@ def test_noop_update_keeps_snapshot_valid(name, factory):
     k0 = keys[0]
     stores = idx.pmem.counters.stores
     assert idx.update(k0, (k0 % 4093) + 1)  # scalar no-op
-    assert idx.write_batch([("update", k, (k % 4093) + 1)
+    assert idx._write_batch([("update", k, (k % 4093) + 1)
                             for k in keys[:10]]) == [True] * 10
     assert idx.pmem.counters.stores == stores, "no-op updates stored"
     assert idx.snapshot() is s
@@ -263,7 +263,7 @@ def test_group_commit_amortizes_persist_traffic(name, factory):
     for k in load:
         ib.insert(k, k % 97 + 1)
     c0 = batch_pm.counters.snapshot()
-    ib.write_batch([("insert", k, 7) for k in fresh])
+    ib._write_batch([("insert", k, 7) for k in fresh])
     cb = batch_pm.counters.delta(c0)
     n = len(fresh)
     assert cb.clwb / n <= cs.clwb / n + 1e-9, (cb.clwb, cs.clwb)
@@ -342,7 +342,7 @@ def test_serving_ingest_keeps_warm_shards():
     covered, _ = kv.prefix_lookup(warm)
     assert covered == len(warm)
     # steady serving keeps a warm export (decode/warmup probes force it)
-    kv.prefix.lookup_batch(kv._block_hashes(warm), force_kernel=True)
+    kv.prefix._lookup_batch(kv._block_hashes(warm), force_kernel=True)
     before = kv.prefix.shard_stats["refined_queries"]
     toks2 = [int(t) for t in rng.integers(1001, 2000, size=16)]
     kv.prefix_insert(toks2, [kv.alloc_page() for _ in range(4)])

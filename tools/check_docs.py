@@ -8,10 +8,13 @@ Fails (exit 1) when:
 * a ``kernels/<name>`` reference in the checked documents names a
   kernel package that does not exist under src/repro/kernels/
   (dangling kernel-package references);
-* one of the five index kernel packages (probe, clht_probe,
-  art_probe, scan, partition) is missing its README.md;
-* the top-level README.md, docs/ARCHITECTURE.md, or
-  docs/PMEM_MODEL.md is missing.
+* one of the index/plan kernel packages (probe, clht_probe,
+  art_probe, scan, partition, conflict) is missing its README.md;
+* the top-level README.md, docs/ARCHITECTURE.md, docs/PMEM_MODEL.md,
+  or docs/API.md is missing;
+* docs/API.md stops documenting the public plan surface (the
+  ``execute``/``Plan``/``Session``/``pipeline`` anchor terms) or
+  loses the migration table from the pre-plan ``*_batch`` calls.
 """
 
 from __future__ import annotations
@@ -22,9 +25,14 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 KERNELS = ROOT / "src" / "repro" / "kernels"
-README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition")
+README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition",
+                   "conflict")
 TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
-                     "docs/PMEM_MODEL.md")
+                     "docs/PMEM_MODEL.md", "docs/API.md")
+# the public-surface anchors docs/API.md must keep documenting
+API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
+                   "open_index", "lookup_batch", "scan_batch",
+                   "write_batch")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -68,6 +76,13 @@ def main() -> int:
     for name in README_REQUIRED:
         if not (KERNELS / name / "README.md").exists():
             errors.append(f"src/repro/kernels/{name}/README.md is missing")
+    api_doc = ROOT / "docs" / "API.md"
+    if api_doc.exists():
+        api_text = api_doc.read_text()
+        for anchor in API_DOC_ANCHORS:
+            if anchor not in api_text:
+                errors.append(f"docs/API.md no longer documents "
+                              f"{anchor!r} (public-surface drift)")
     for path in files:
         errors.extend(check_file(path, kernel_pkgs))
     for e in errors:
