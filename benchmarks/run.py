@@ -42,7 +42,14 @@ def main() -> None:
                     help="also write the summary rows as JSON "
                          "(BENCH_ycsb.json-style), accumulating the "
                          "perf trajectory across runs")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the whole run with the obs tracer and "
+                         "write a Chrome-trace JSON to PATH")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.reset()
+        obs.enable()
     if args.json:
         # fail fast, not after minutes of benchmarking
         parent = os.path.dirname(os.path.abspath(args.json))
@@ -75,6 +82,17 @@ def main() -> None:
         dt = time.perf_counter() - t0
         all_rows.extend(rows)
         print(f"--- {name} done in {dt:.1f}s")
+    if args.trace:
+        from repro import obs
+        obs.disable()
+        obs.write_trace(args.trace)
+        errs = obs.validate_trace_file(args.trace)
+        if errs:
+            for e in errs:
+                print(f"FAIL {e}")
+            sys.exit(1)
+        print(f"wrote trace to {args.trace} "
+              f"({len(obs.spans())} spans, schema valid)")
     print("\nname,value,derived")
     flat = []
     for name, payload in all_rows:
@@ -97,6 +115,10 @@ def main() -> None:
         total_waves = sum(r["value"] for r in wave_rows)
         total_wave_ops = sum(r["value"] * width_rows.get(r["name"], 0)
                              for r in wave_rows)
+        # top-level per-op latency columns, lifted from the merged
+        # ycsb_latency/all row (0.0 when ycsb didn't run this pass)
+        lat = {r["name"].split(".", 1)[1]: r["value"] for r in flat
+               if r["name"].startswith("ycsb_latency/all.")}
         record = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "commit": _git_commit(),
@@ -106,6 +128,8 @@ def main() -> None:
             "plan_waves_total": total_waves,
             "plan_mean_wave_width": (total_wave_ops / total_waves
                                      if total_waves else 0.0),
+            "lat_p50_us": lat.get("lat_p50_us", 0.0),
+            "lat_p99_us": lat.get("lat_p99_us", 0.0),
             "rows": flat,
         }
         # accumulate: the file holds a list of run records (trajectory)

@@ -12,9 +12,11 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List
 
+from repro import obs
 from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem
 from repro.core.baselines import CCEH, FastFair, LevelHashing
 from repro.core.ycsb import WORKLOADS, generate, run_workload
+from repro.obs import Histogram
 
 ORDERED = {
     "FAST&FAIR": lambda p: FastFair(p, fixed=True),
@@ -50,7 +52,8 @@ class GlobalLockART(PART):
 
 
 def bench_index(name: str, factory: Callable, n_load: int, n_run: int,
-                workloads: List[str], *, scans: bool) -> Dict[str, float]:
+                workloads: List[str], *, scans: bool,
+                all_hist: Histogram = None) -> Dict[str, float]:
     out: Dict[str, float] = {}
     for wl_name in workloads:
         if wl_name == "E" and not scans:
@@ -58,16 +61,33 @@ def bench_index(name: str, factory: Callable, n_load: int, n_run: int,
         wl = generate(wl_name, n_load, n_run, seed=7)
         pmem = PMem()
         idx = factory(pmem)
+        c0 = pmem.counters.snapshot()
         t0 = time.perf_counter()
         run_workload(idx, wl, phase="load")
         t_load = time.perf_counter() - t0
+        d_load = pmem.counters.delta(c0)
+        n_loads = max(len(wl.load_ops), 1)
         if wl_name == "LoadA":
             out["LoadA"] = len(wl.load_ops) / t_load / 1e3
+            out["LoadA_clwb_per_op"] = d_load.clwb / n_loads
+            out["LoadA_fence_per_op"] = d_load.fence / n_loads
             continue
+        hist = Histogram(f"{name}/{wl_name}")
+        c0 = pmem.counters.snapshot()
         t0 = time.perf_counter()
-        run_workload(idx, wl, phase="run")
+        run_workload(idx, wl, phase="run", lat_hist=hist)
         t_run = time.perf_counter() - t0
+        d_run = pmem.counters.delta(c0)
+        n_ops = max(len(wl.run_ops), 1)
         out[wl_name] = len(wl.run_ops) / t_run / 1e3
+        # per-op latency percentiles (ns -> us) and PM-traffic breakdown
+        out[f"{wl_name}_lat_p50_us"] = hist.percentile(50) / 1e3
+        out[f"{wl_name}_lat_p99_us"] = hist.percentile(99) / 1e3
+        out[f"{wl_name}_clwb_per_op"] = d_run.clwb / n_ops
+        out[f"{wl_name}_fence_per_op"] = d_run.fence / n_ops
+        out[f"{wl_name}_loads_per_op"] = d_run.loads / n_ops
+        if all_hist is not None:
+            all_hist.merge(hist)
     return out
 
 
@@ -168,8 +188,10 @@ def bench_mixed_plan(n_load: int, n_run: int, workloads=("A", "D", "F")):
             idx_p = factory(pm_p)
             run_workload(idx_p, wl, phase="load", batch_lookups=True)
             c0 = pm_p.counters.snapshot()
+            hist = Histogram(f"{name}/{wl_name}")
             t0 = time.perf_counter()
-            plan = run_workload(idx_p, wl, phase="run", batch_lookups=True)
+            plan = run_workload(idx_p, wl, phase="run", batch_lookups=True,
+                                lat_hist=hist)
             t_p = time.perf_counter() - t0
             cp = pm_p.counters.delta(c0)
             assert all(plan[k] == buf[k] for k in sig), \
@@ -178,6 +200,8 @@ def bench_mixed_plan(n_load: int, n_run: int, workloads=("A", "D", "F")):
                            + plan["delete"], 1)
             out[f"{wl_name}_buffered"] = n_ops / t_b / 1e3
             out[f"{wl_name}_plan"] = n_ops / t_p / 1e3
+            out[f"{wl_name}_lat_p50_us"] = hist.percentile(50) / 1e3
+            out[f"{wl_name}_lat_p99_us"] = hist.percentile(99) / 1e3
             out[f"{wl_name}_speedup"] = t_b / t_p
             out[f"{wl_name}_waves"] = plan["waves"]
             out[f"{wl_name}_mean_wave_width"] = (
@@ -306,19 +330,50 @@ def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
     return rows
 
 
+def trace_smoke(n: int = 2000) -> dict:
+    """Tiny traced YCSB-A run on P-CLHT with the exact-attribution
+    assert: the per-wave clwb/fence span attributes must sum to the run
+    phase's ``PMem.counters`` deltas.  Returns the Chrome-trace dict
+    (the caller writes/validates it)."""
+    wl = generate("A", n, n, seed=7)
+    pmem = PMem()
+    idx = PCLHT(pmem, n_buckets=512)
+    run_workload(idx, wl, phase="load", batch_lookups=True)
+    obs.reset()
+    obs.enable()
+    try:
+        c0 = pmem.counters.snapshot()
+        run_workload(idx, wl, phase="run", batch_lookups=True)
+        d = pmem.counters.delta(c0)
+    finally:
+        obs.disable()
+    waves = obs.spans("plan.wave")
+    s_clwb = sum(w.attrs.get("clwb", 0) for w in waves)
+    s_fence = sum(w.attrs.get("fence", 0) for w in waves)
+    assert (s_clwb, s_fence) == (d.clwb, d.fence), (
+        f"per-wave attribution drifted from PMem.counters: "
+        f"clwb {s_clwb} != {d.clwb} or fence {s_fence} != {d.fence}")
+    print(f"# trace smoke: {len(waves)} waves, clwb {s_clwb} == {d.clwb}, "
+          f"fence {s_fence} == {d.fence} (exact)")
+    return obs.chrome_trace(obs.RECORDER)
+
+
 def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
         batched: bool = True):
     rows = []
     wls = ["LoadA", "A", "B", "C", "E"]
+    all_hist = Histogram("ycsb/all")
     print("# Fig 4a analogue — ordered indexes, Kops/s (randint keys)")
     for name, factory in ORDERED.items():
-        r = bench_index(name, factory, n_load, n_run, wls, scans=True)
+        r = bench_index(name, factory, n_load, n_run, wls, scans=True,
+                        all_hist=all_hist)
         rows.append((f"ycsb_ordered/{name}", r))
         print(f"  {name:12s} " + "  ".join(f"{w}={r.get(w, 0):8.1f}"
                                            for w in wls))
     print("# Fig 5 analogue — unordered indexes, Kops/s")
     for name, factory in UNORDERED.items():
-        r = bench_index(name, factory, n_load, n_run, wls[:-1], scans=False)
+        r = bench_index(name, factory, n_load, n_run, wls[:-1], scans=False,
+                        all_hist=all_hist)
         rows.append((f"ycsb_unordered/{name}", r))
         print(f"  {name:12s} " + "  ".join(f"{w}={r.get(w, 0):8.1f}"
                                            for w in wls[:-1]))
@@ -329,6 +384,15 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
         rows.append(("ycsb_woart/WOART-lock", r))
         print(f"  {'WOART-lock':12s} " + "  ".join(
             f"{w}={r.get(w, 0):8.1f}" for w in ("LoadA", "A", "C")))
+    # merged per-op latency over every scalar run phase above
+    agg = all_hist.summary(scale=1e-3)  # ns -> us
+    rows.append(("ycsb_latency/all",
+                 {"lat_p50_us": agg["p50"], "lat_p95_us": agg["p95"],
+                  "lat_p99_us": agg["p99"], "lat_mean_us": agg["mean"],
+                  "n_ops": agg["count"]}))
+    print(f"# per-op latency (all scalar run phases): "
+          f"p50={agg['p50']:.1f}us p99={agg['p99']:.1f}us "
+          f"({agg['count']} ops)")
     if batched:
         rows.extend(bench_batched(n_load, n_run))
         rows.extend(bench_batched_scan(n_load, n_run))
@@ -339,9 +403,33 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
 
 if __name__ == "__main__":
     import argparse
+    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="only the traced attribution smoke run")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace JSON of the run to PATH")
     args = ap.parse_args()
-    n = 4000 if args.quick else 20000
-    run(n, n)
+    if args.smoke:
+        trace_obj = trace_smoke()
+        if args.trace:
+            with open(args.trace, "w") as f:
+                json.dump(trace_obj, f, indent=1)
+            errs = obs.validate_chrome_trace(trace_obj)
+            assert not errs, errs
+            print(f"# wrote {args.trace}: "
+                  f"{len(trace_obj['traceEvents'])} events, schema valid")
+    else:
+        n = 4000 if args.quick else 20000
+        if args.trace:
+            obs.reset()
+            obs.enable()
+        run(n, n)
+        if args.trace:
+            obs.disable()
+            obs.write_trace(args.trace)
+            errs = obs.validate_trace_file(args.trace)
+            assert not errs, errs
+            print(f"# wrote {args.trace}: schema valid")

@@ -20,6 +20,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan,
                     PlanResult)
+from ..obs import MetricsRegistry, MetricsView
 
 # public index kinds; aliases accept the paper's P-* names (any case)
 _KINDS = {
@@ -162,7 +163,10 @@ class Session:
     def __init__(self, index, *, kind: str):
         self.index = index
         self.kind = kind
-        self.stats: Dict[str, int] = {"plans": 0, "waves": 0, "wave_ops": 0}
+        self.metrics = MetricsRegistry()
+        for name in ("plans", "waves", "wave_ops"):
+            self.metrics.counter(name)
+        self.stats = MetricsView(self.metrics)
 
     @property
     def pmem(self) -> PMem:
@@ -176,9 +180,9 @@ class Session:
     def execute(self, plan: Plan, *, force_kernel: bool = False
                 ) -> PlanResult:
         res = self.index.execute(plan, force_kernel=force_kernel)
-        self.stats["plans"] += 1
-        self.stats["waves"] += res.n_waves
-        self.stats["wave_ops"] += sum(res.wave_widths)
+        self.metrics.counter("plans").inc()
+        self.metrics.counter("waves").inc(res.n_waves)
+        self.metrics.counter("wave_ops").inc(sum(res.wave_widths))
         return res
 
     def pipeline(self, *, depth: int = 4096) -> Pipeline:

@@ -66,6 +66,7 @@ class CCEH(RecipeIndex):
         super().__init__(pmem)
         self.fixed = fixed
         self.arena = Arena(pmem, "cceh")
+        self._region_prefixes = ("cceh.",)
         self.super = pmem.alloc("cceh.super", 8)
         # buggy-mode legacy layout keeps depth in a SEPARATE word from the
         # directory pointer (word1) — that's the unsafe pair
@@ -171,6 +172,33 @@ class CCEH(RecipeIndex):
                 self._split_segment(key)
             finally:
                 a.unlock(seg)
+
+    def update(self, key: int, value: int) -> bool:
+        """In-place value update: one counted store + clwb + fence on
+        the value word (the key word never moves, so readers always see
+        old-or-new — Condition #1).  Falls through to ``insert`` when
+        the key is absent, matching the scalar update contract."""
+        assert key != NULL
+        a = self.arena
+        while True:
+            _, _, seg = self._seg_for(key)
+            a.lock(seg)
+            try:
+                _, _, seg2 = self._seg_for(key)
+                if seg2 != seg:
+                    continue
+                off = self._bucket_off(seg, key)
+                for s in range(SLOTS_PER_BUCKET):
+                    if a.load(seg + off + 2 * s) == key:
+                        vaddr = seg + off + 2 * s + 1
+                        if a.load(vaddr) != value:
+                            a.store(vaddr, value)
+                            a.clwb(vaddr)
+                            a.fence()
+                        return True
+            finally:
+                a.unlock(seg)
+            return self.insert(key, value)  # absent -> insert path
 
     def delete(self, key: int) -> bool:
         a = self.arena

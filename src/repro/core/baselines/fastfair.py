@@ -57,6 +57,7 @@ class FastFair(RecipeIndex):
         super().__init__(pmem)
         self.fixed = fixed
         self.arena = Arena(pmem, "ff")
+        self._region_prefixes = ("ff.",)
         self.super = pmem.alloc("ff.super", 8)
         root = self._new_node(T_LEAF, high_key=INF)
         if fixed:
@@ -216,6 +217,32 @@ class FastFair(RecipeIndex):
             if k == key:
                 return i
         return None
+
+    def update(self, key: int, value: int) -> bool:
+        """In-place value update: one counted store + clwb + fence on
+        the value word.  Keys never move, so a reader sees old-or-new
+        (the same single-word atomicity delete's tombstone relies on).
+        Absent (or tombstoned) keys fall through to ``insert``."""
+        assert key != NULL and value != NULL
+        a = self.arena
+        while True:
+            path = self._descend(key)
+            leaf = path[-1]
+            a.lock(leaf)
+            try:
+                if self.fixed and key >= a.load(leaf + 2) \
+                        and a.load(leaf + 1) != NULL:
+                    continue
+                i = self._find_in_node(leaf, key)
+                if i is not None and a.load(leaf + V0 + i) != NULL:
+                    if a.load(leaf + V0 + i) != value:
+                        a.store(leaf + V0 + i, value)
+                        a.clwb(leaf + V0 + i)
+                        a.fence()
+                    return True
+            finally:
+                a.unlock(leaf)
+            return self.insert(key, value)  # absent -> insert path
 
     def delete(self, key: int) -> bool:
         a = self.arena

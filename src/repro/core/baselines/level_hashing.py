@@ -44,6 +44,7 @@ class LevelHashing(RecipeIndex):
     def __init__(self, pmem: PMem, n_top: int = 16):
         super().__init__(pmem)
         self.arena = Arena(pmem, "level")
+        self._region_prefixes = ("level.",)
         self.super = pmem.alloc("level.super", 8)  # [meta_ptr]
         self._build(n_top)
 
@@ -114,6 +115,26 @@ class LevelHashing(RecipeIndex):
                 finally:
                     a.unlock(b)
             self._resize()
+
+    def update(self, key: int, value: int) -> bool:
+        """In-place value update: one counted store + clwb + fence on
+        the value word of whichever candidate bucket holds the key.
+        Absent keys fall through to ``insert``."""
+        assert key != NULL
+        a = self.arena
+        for b in self._candidates(key):
+            a.lock(b)
+            try:
+                for s in range(SLOTS):
+                    if a.load(b + 2 * s) == key:
+                        if a.load(b + 2 * s + 1) != value:
+                            a.store(b + 2 * s + 1, value)
+                            a.clwb(b + 2 * s + 1)
+                            a.fence()
+                        return True
+            finally:
+                a.unlock(b)
+        return self.insert(key, value)  # absent -> insert path
 
     def delete(self, key: int) -> bool:
         a = self.arena

@@ -48,6 +48,7 @@ from typing import Any, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..kernels.conflict import DELETE, GET, PUT, SCAN, UPDATE
+from ..obs import RECORDER as _OBS
 
 
 class OpKind(enum.IntEnum):
@@ -378,18 +379,25 @@ def _run_single(index, kind: int, key: int, aux: int,
     """Single-op plans degenerate to the scalar path: no snapshot
     export, no partition, no kernel dispatch."""
     key, aux = int(key), int(aux)
-    if kind == GET:
-        r = index.lookup(key)
-        result.found += r is not None
-    elif kind == SCAN:
-        r = index.scan(key, aux)
-        result.scanned += len(r)
-    else:
-        r = index._apply_write(_KIND_TO_WRITE_NAME[kind], key, aux)
-        result.acked += bool(r)
+    wave_kind = ("scan" if kind == SCAN else
+                 "read" if kind == GET else "write")
+    with _OBS.span("plan.wave", kind=wave_kind, wave=0, width=1) as sp:
+        c0 = index.pmem.counters.snapshot() if sp else None
+        if kind == GET:
+            r = index.lookup(key)
+            result.found += r is not None
+        elif kind == SCAN:
+            r = index.scan(key, aux)
+            result.scanned += len(r)
+        else:
+            r = index._apply_write(_KIND_TO_WRITE_NAME[kind], key, aux)
+            result.acked += bool(r)
+        if sp:
+            d = index.pmem.counters.delta(c0)
+            sp.set(stores=d.stores, loads=d.loads, clwb=d.clwb,
+                   fence=d.fence, lines_touched=d.lines_touched)
     result.results[0] = r
-    result.wave_kinds.append("scan" if kind == SCAN else
-                             "read" if kind == GET else "write")
+    result.wave_kinds.append(wave_kind)
     result.wave_widths.append(1)
 
 
@@ -408,34 +416,47 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
     if n == 0:
         return result
     kinds, keys, aux = plan.arrays()
-    if n == 1 and collect_results and not force_kernel:
-        # degenerate to the scalar path — unless the caller forced the
-        # kernel, which is an explicit request to (re)warm the snapshot
-        _run_single(index, int(kinds[0]), keys[0], aux[0], result)
-        return result
-    waves = schedule_waves(kinds, keys)
-    results = result.results
-    for wave in waves:
-        idx = wave.indices
-        result.wave_kinds.append(wave.kind)
-        result.wave_widths.append(int(idx.size))
-        if wave.kind == "read":
-            out = index._lookup_batch(keys[idx], force_kernel=force_kernel)
-            result.found += len(out) - out.count(None)
-        elif wave.kind == "scan":
-            out = index._scan_batch(keys[idx], aux[idx],
-                                    force_kernel=force_kernel)
-            result.scanned += sum(map(len, out))
-        else:
-            ops = [(_KIND_TO_WRITE_NAME[k], key, a)
-                   for k, key, a in zip(kinds[idx].tolist(),
-                                        keys[idx].tolist(),
-                                        aux[idx].tolist())]
-            out = index._write_batch(ops)
-            result.acked += sum(map(bool, out))
-        if collect_results:
-            for i, r in zip(idx.tolist(), out):
-                results[i] = r
+    with _OBS.span("plan.execute", n_ops=n):
+        if n == 1 and collect_results and not force_kernel:
+            # degenerate to the scalar path — unless the caller forced
+            # the kernel, an explicit request to (re)warm the snapshot
+            _run_single(index, int(kinds[0]), keys[0], aux[0], result)
+            return result
+        with _OBS.span("plan.schedule", n_ops=n):
+            waves = schedule_waves(kinds, keys)
+        results = result.results
+        for wi, wave in enumerate(waves):
+            idx = wave.indices
+            result.wave_kinds.append(wave.kind)
+            result.wave_widths.append(int(idx.size))
+            with _OBS.span("plan.wave", kind=wave.kind, wave=wi,
+                           width=int(idx.size)) as sp:
+                c0 = index.pmem.counters.snapshot() if sp else None
+                if wave.kind == "read":
+                    with _OBS.span("plan.lookup_batch", width=int(idx.size)):
+                        out = index._lookup_batch(keys[idx],
+                                                  force_kernel=force_kernel)
+                    result.found += len(out) - out.count(None)
+                elif wave.kind == "scan":
+                    with _OBS.span("plan.scan_batch", width=int(idx.size)):
+                        out = index._scan_batch(keys[idx], aux[idx],
+                                                force_kernel=force_kernel)
+                    result.scanned += sum(map(len, out))
+                else:
+                    ops = [(_KIND_TO_WRITE_NAME[k], key, a)
+                           for k, key, a in zip(kinds[idx].tolist(),
+                                                keys[idx].tolist(),
+                                                aux[idx].tolist())]
+                    with _OBS.span("plan.write_batch", width=int(idx.size)):
+                        out = index._write_batch(ops)
+                    result.acked += sum(map(bool, out))
+                if sp:
+                    d = index.pmem.counters.delta(c0)
+                    sp.set(stores=d.stores, loads=d.loads, clwb=d.clwb,
+                           fence=d.fence, lines_touched=d.lines_touched)
+            if collect_results:
+                for i, r in zip(idx.tolist(), out):
+                    results[i] = r
     return result
 
 

@@ -48,6 +48,8 @@ from typing import Callable, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from ..obs import RECORDER as _OBS
+
 WORD_BYTES = 8
 CACHELINE_BYTES = 64
 WORDS_PER_LINE = CACHELINE_BYTES // WORD_BYTES
@@ -215,8 +217,11 @@ class PMem:
         return int(region.cache[idx])
 
     def cas(self, region: Region, idx: int, expected: int, new: int) -> bool:
-        """Compare-and-swap; counts as a store when it succeeds."""
-        if int(region.cache[idx]) != expected:
+        """Compare-and-swap; counts as a store when it succeeds.  The
+        compare is a counted load (it touches the line like any read);
+        ``load`` has no crash point, so failure injection still lands
+        only on the store side."""
+        if self.load(region, idx) != expected:
             return False
         self.store(region, idx, new)
         return True
@@ -443,14 +448,23 @@ class _GroupCommit:
     fence; on exception it abandons them (power-fail semantics — the
     un-acked group is simply not durable)."""
 
-    __slots__ = ("pmem",)
+    __slots__ = ("pmem", "_span", "_c0")
 
     def __init__(self, pmem: PMem):
         self.pmem = pmem
+        self._span = None
+        self._c0 = None
 
     def __enter__(self) -> PMem:
-        self.pmem._group_depth += 1
-        return self.pmem
+        p = self.pmem
+        if p._group_depth == 0:
+            sp = _OBS.span("pmem.group_commit")
+            if sp:
+                self._span = sp
+                self._c0 = p.counters.snapshot()
+                sp.__enter__()
+        p._group_depth += 1
+        return p
 
     def __exit__(self, exc_type, exc, tb) -> bool:
         p = self.pmem
@@ -460,6 +474,14 @@ class _GroupCommit:
                 p._close_group()
             else:
                 p._abandon_group()
+            sp = self._span
+            if sp:
+                d = p.counters.delta(self._c0)
+                sp.set(stores=d.stores, loads=d.loads, clwb=d.clwb,
+                       fence=d.fence, lines_touched=d.lines_touched,
+                       aborted=exc_type is not None)
+                sp.__exit__(None, None, None)
+                self._span = None
         return False
 
 

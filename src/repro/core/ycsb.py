@@ -14,6 +14,7 @@ traverse more bytes — the cache-behavior analogue).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -143,11 +144,13 @@ class PhaseExecutor:
     """
 
     def __init__(self, index, *, batch_lookups: bool = False,
-                 max_batch: int = 4096, buffered: bool = False):
+                 max_batch: int = 4096, buffered: bool = False,
+                 lat_hist=None):
         self.index = index
         self.batch_lookups = batch_lookups
         self.max_batch = max_batch
         self.buffered = buffered
+        self.lat_hist = lat_hist  # optional obs.Histogram of per-op ns
         self.done = {"insert": 0, "update": 0, "delete": 0, "lookup": 0,
                      "scan": 0, "found": 0, "scanned": 0, "acked": 0,
                      "batches": 0, "scan_batches": 0, "write_batches": 0,
@@ -175,10 +178,16 @@ class PhaseExecutor:
         done["delete"] += int(cnt[DELETE])
         done["scan"] += int(cnt[SCAN])
         mb = self.max_batch
+        hist = self.lat_hist
         for lo in range(0, n, mb):
             plan = Plan.from_arrays(kinds[lo:lo + mb], keys[lo:lo + mb],
                                     aux[lo:lo + mb])
+            if hist is not None:
+                t0 = time.perf_counter_ns()
             res = self.index.execute(plan, collect_results=False)
+            if hist is not None:
+                # amortized per-op latency: the batch's ops share its cost
+                hist.record_batch(time.perf_counter_ns() - t0, len(plan))
             done["found"] += res.found
             done["acked"] += res.acked
             done["scanned"] += res.scanned
@@ -271,7 +280,11 @@ class PhaseExecutor:
             return self._run_plans(ops)
         done = self.done
         index, lookup = self.index, self.index.lookup
+        hist = self.lat_hist
+        timer = time.perf_counter_ns
         for kind, key, aux in ops:
+            if hist is not None:
+                t0 = timer()
             if kind == "lookup":
                 if lookup(key) is not None:
                     done["found"] += 1
@@ -288,20 +301,25 @@ class PhaseExecutor:
                     r = index.delete(key)
                 done["acked"] += bool(r)
                 done[kind] += 1
+            if hist is not None:
+                hist.record(timer() - t0)
         return done
 
 
 def run_workload(index, wl: Workload, *, phase: str = "run",
                  batch_lookups: bool = False, max_batch: int = 4096,
-                 buffered: bool = False) -> dict:
+                 buffered: bool = False, lat_hist=None) -> dict:
     """Execute a phase; returns op counts (throughput measured by caller).
     With ``batch_lookups`` the op stream runs as operation plans of
     ``max_batch`` ops through ``index.execute`` — conflict-wave
     scheduling over the Pallas probe/scan kernels and the sharded
     group-commit write path, for all five converted indexes.
     ``buffered`` selects the pre-plan buffer-and-flush baseline
-    instead (benchmark honesty comparisons only)."""
+    instead (benchmark honesty comparisons only).  ``lat_hist`` (an
+    ``obs.Histogram``) collects per-op latency in ns: exact per op on
+    the scalar path, amortized per plan chunk on the batched path."""
     ops = wl.load_ops if phase == "load" else wl.run_ops
     ex = PhaseExecutor(index, batch_lookups=batch_lookups,
-                       max_batch=max_batch, buffered=buffered)
+                       max_batch=max_batch, buffered=buffered,
+                       lat_hist=lat_hist)
     return ex.run(ops)

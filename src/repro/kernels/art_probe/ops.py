@@ -13,6 +13,7 @@ from typing import Dict, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import RECORDER as _OBS
 from ..probe import combine64, pad_queries, split64
 from .kernel import QUERY_BLOCK, art_descend
 
@@ -53,15 +54,18 @@ def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
     q = np.asarray(queries, np.int64)
     Q = q.shape[0]
     pad = pad_queries(Q)
-    if pad:
-        q = np.pad(q, (0, pad))  # padded lanes miss at the leaf check
-    qb = min(QUERY_BLOCK, q.shape[0])
-    qlo, qhi = split64(q)
-    found, olo, ohi = art_descend(
-        jnp.asarray(key_units(q, unit_bits)), jnp.asarray(qlo),
-        jnp.asarray(qhi), *node_pages, query_block=qb, interpret=interpret)
-    found = np.asarray(found)[:Q]
-    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    with _OBS.span("kernel.art_probe", batch=Q, padded=Q + pad,
+                   pad_ratio=pad / max(Q + pad, 1), unit_bits=unit_bits):
+        if pad:
+            q = np.pad(q, (0, pad))  # padded lanes miss at the leaf check
+        qb = min(QUERY_BLOCK, q.shape[0])
+        qlo, qhi = split64(q)
+        found, olo, ohi = art_descend(
+            jnp.asarray(key_units(q, unit_bits)), jnp.asarray(qlo),
+            jnp.asarray(qhi), *node_pages, query_block=qb,
+            interpret=interpret)
+        found = np.asarray(found)[:Q]
+        values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
     return found, np.where(found, values, 0)
 
 

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import RECORDER as _OBS
 from ..probe import combine64, pad_queries, probe64_lookup, split64
 from ..probe.kernel import QUERY_BLOCK, probe64
 from .kernel import clht_probe
@@ -95,17 +96,19 @@ def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
     q = np.asarray(queries, np.int64)
     Q = q.shape[0]
     pad = pad_queries(Q)
-    if pad:
-        # padded queries are 0 == the empty-slot sentinel; they probe
-        # bucket mix64(0) % n and the rows are sliced off below
-        q = np.pad(q, (0, pad))
-    bucket = (mix64(q) % _U64(n)).astype(np.int32)
-    qlo, qhi = split64(q)
-    found, olo, ohi = _gather_probe(
-        jnp.asarray(bucket), jnp.asarray(qlo), jnp.asarray(qhi), *halves,
-        nxt_dev, depth=depth, interpret=interpret)
-    found = np.asarray(found)[:Q]
-    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    with _OBS.span("kernel.clht_probe", batch=Q, padded=Q + pad,
+                   pad_ratio=pad / max(Q + pad, 1), depth=depth):
+        if pad:
+            # padded queries are 0 == the empty-slot sentinel; they probe
+            # bucket mix64(0) % n and the rows are sliced off below
+            q = np.pad(q, (0, pad))
+        bucket = (mix64(q) % _U64(n)).astype(np.int32)
+        qlo, qhi = split64(q)
+        found, olo, ohi = _gather_probe(
+            jnp.asarray(bucket), jnp.asarray(qlo), jnp.asarray(qhi), *halves,
+            nxt_dev, depth=depth, interpret=interpret)
+        found = np.asarray(found)[:Q]
+        values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
     return found, np.where(found, values, 0)
 
 

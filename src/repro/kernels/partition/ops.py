@@ -16,6 +16,7 @@ from typing import Tuple
 
 import numpy as np
 
+from ...obs import RECORDER as _OBS
 from .ref import mix64_ref, partition_ref, route_ref
 
 
@@ -49,7 +50,10 @@ def route_shards(keys: np.ndarray, n_shards: int, scheme: str = "hash", *,
 def partition_writes(keys: np.ndarray, n_shards: int, scheme: str = "hash"
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(shards, order, offsets) for a write batch — see partition_ref."""
-    return partition_ref(np.asarray(keys, np.int64), n_shards, scheme)
+    keys = np.asarray(keys, np.int64)
+    with _OBS.span("kernel.partition", batch=int(keys.size),
+                   n_shards=n_shards):
+        return partition_ref(keys, n_shards, scheme)
 
 
 __all__ = ["mix64_ref", "partition_writes", "route_ref", "route_shards"]

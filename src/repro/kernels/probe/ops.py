@@ -16,6 +16,7 @@ from typing import List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import RECORDER as _OBS
 from .kernel import QUERY_BLOCK, probe64
 
 LANES = 128  # pad probe windows to whole VREG rows
@@ -93,20 +94,23 @@ def probe64_windows(queries: np.ndarray, split_windows: Sequence[np.ndarray],
     Q = queries.shape[0]
     klo, khi, vlo, vhi = split_windows
     pad = pad_queries(Q)
-    if pad:
-        # padded queries are 0 == the empty-slot sentinel, so they may
-        # "hit" padding slots — harmless, the rows are sliced off below
-        queries = np.pad(queries, (0, pad))
-        klo, khi, vlo, vhi = (np.pad(w, ((0, pad), (0, 0)))
-                              for w in (klo, khi, vlo, vhi))
-    qlo, qhi = split64(queries)
-    qb = min(QUERY_BLOCK, qlo.shape[0])
-    found, olo, ohi = probe64(
-        jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(klo),
-        jnp.asarray(khi), jnp.asarray(vlo), jnp.asarray(vhi),
-        query_block=qb, interpret=interpret)
-    found = np.asarray(found)[:Q]
-    values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+    with _OBS.span("kernel.probe64", batch=Q, padded=Q + pad,
+                   pad_ratio=pad / max(Q + pad, 1),
+                   window=int(klo.shape[1])):
+        if pad:
+            # padded queries are 0 == the empty-slot sentinel, so they
+            # may "hit" padding slots — harmless, rows are sliced below
+            queries = np.pad(queries, (0, pad))
+            klo, khi, vlo, vhi = (np.pad(w, ((0, pad), (0, 0)))
+                                  for w in (klo, khi, vlo, vhi))
+        qlo, qhi = split64(queries)
+        qb = min(QUERY_BLOCK, qlo.shape[0])
+        found, olo, ohi = probe64(
+            jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(klo),
+            jnp.asarray(khi), jnp.asarray(vlo), jnp.asarray(vhi),
+            query_block=qb, interpret=interpret)
+        found = np.asarray(found)[:Q]
+        values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
     return found, np.where(found, values, 0)
 
 

@@ -14,6 +14,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ...obs import RECORDER as _OBS
 from ..probe import combine64, split64
 from .kernel import QUERY_BLOCK, scan_window
 
@@ -70,19 +71,21 @@ def _run_kernel(queries: np.ndarray, counts: np.ndarray, prepared: tuple,
     # whole QUERY_ROWS below one kernel block, whole blocks above it —
     # the padded count must divide evenly into grid steps
     pad = (-Q) % (QUERY_BLOCK if Q > QUERY_BLOCK else QUERY_ROWS)
-    if pad:
-        # padded queries carry count 0, so their rows come back empty
-        q = np.pad(q, (0, pad))
-        c = np.pad(c, (0, pad))
-    qlo, qhi = split64(q)
-    qb = min(QUERY_BLOCK, q.shape[0])
-    valid, oklo, okhi, ovlo, ovhi = scan_window(
-        jnp.asarray(qlo ^ _BIAS), jnp.asarray(qhi), jnp.asarray(c),
-        klo, khi, vlo, vhi, n_dev,
-        steps=steps, max_count=C, query_block=qb, interpret=interpret)
-    valid = np.asarray(valid)[:Q]
-    okeys = combine64(np.asarray(oklo)[:Q], np.asarray(okhi)[:Q])
-    ovals = combine64(np.asarray(ovlo)[:Q], np.asarray(ovhi)[:Q])
+    with _OBS.span("kernel.scan", batch=Q, padded=Q + pad,
+                   pad_ratio=pad / max(Q + pad, 1), window=C):
+        if pad:
+            # padded queries carry count 0, so their rows come back empty
+            q = np.pad(q, (0, pad))
+            c = np.pad(c, (0, pad))
+        qlo, qhi = split64(q)
+        qb = min(QUERY_BLOCK, q.shape[0])
+        valid, oklo, okhi, ovlo, ovhi = scan_window(
+            jnp.asarray(qlo ^ _BIAS), jnp.asarray(qhi), jnp.asarray(c),
+            klo, khi, vlo, vhi, n_dev,
+            steps=steps, max_count=C, query_block=qb, interpret=interpret)
+        valid = np.asarray(valid)[:Q]
+        okeys = combine64(np.asarray(oklo)[:Q], np.asarray(okhi)[:Q])
+        ovals = combine64(np.asarray(ovlo)[:Q], np.asarray(ovhi)[:Q])
     return valid, okeys, ovals
 
 

@@ -44,6 +44,7 @@ CPU-scale reference server driving reduced-config models.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -51,6 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import PART, PCLHT, PMem, Plan
+from ..obs import RECORDER as _OBS
+from ..obs import MetricsRegistry, MetricsView
 
 _M64 = (1 << 64) - 1
 
@@ -310,10 +313,17 @@ class Server:
         self.caches: Dict[int, Any] = {}  # rid -> dense cache (compute)
         self.page_tables: Dict[int, List[Optional[int]]] = {}  # rid -> pages
         self._next_rid = 0
-        self.stats = {"prefill_tokens": 0, "prefix_hits": 0,
-                      "decode_steps": 0, "page_translations": 0,
-                      "translation_batches": 0, "warm_prefixes_restored": 0,
-                      "ingest_write_batches": 0, "prefix_shard_refined": 0}
+        # typed metrics registry; ``stats`` stays as a read-only dict
+        # view over it so existing readers keep working
+        self.metrics = MetricsRegistry()
+        for name in ("prefill_tokens", "prefix_hits", "decode_steps",
+                     "page_translations", "translation_batches",
+                     "ingest_write_batches"):
+            self.metrics.counter(name)
+        for name in ("warm_prefixes_restored", "prefix_shard_refined"):
+            self.metrics.gauge(name)
+        self.stats = MetricsView(self.metrics)
+        self._recover_t0: Optional[int] = None
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
         rid = self._next_rid
@@ -335,6 +345,11 @@ class Server:
         and returns to the queue head — its tick-mates still admit
         (the pre-plan engine raised and dropped the whole tick).
         Returns the requests actually admitted."""
+        with _OBS.span("serve.admit", n_reqs=len(reqs)):
+            return self._admit_inner(reqs, max_len)
+
+    def _admit_inner(self, reqs: List[Request], max_len: int
+                     ) -> List[Request]:
         pairs = [(r.rid, l) for r in reqs
                  for l in range(-(-len(r.prompt) // self.page_size))]
         have = self.kv.lookup_pages_batch(pairs, force_kernel=False)
@@ -370,12 +385,13 @@ class Server:
             [r.prompt for r in admitted], assume_batch_ingest=True)
         # per-request compute prefill + dense cache padding
         for req, (covered, _pages) in zip(admitted, matches):
-            self.stats["prefix_hits"] += covered
+            self.metrics.counter("prefix_hits").inc(covered)
             batch = {"tokens": jnp.asarray([req.prompt], jnp.int32),
                      "labels": jnp.zeros((1, len(req.prompt)), jnp.int32)}
             logits, caches = self.model.prefill(self.params, batch,
                                                 len(req.prompt))
-            self.stats["prefill_tokens"] += len(req.prompt) - covered
+            self.metrics.counter("prefill_tokens").inc(
+                len(req.prompt) - covered)
 
             def pad(c, n=len(req.prompt)):
                 if c.ndim >= 3 and c.shape[-3] == n:
@@ -391,10 +407,10 @@ class Server:
         n_blocks = self.kv.prefix_insert_many(
             [(r.prompt, granted_by_rid[r.rid]) for r in admitted])
         n_grants = sum(len(g) for _, g in by_seq)
-        self.stats["ingest_write_batches"] += (n_grants > 0) + \
-            (sum(n_blocks) > 0)
-        self.stats["prefix_shard_refined"] = \
-            self.kv.prefix.shard_stats["refined_queries"]
+        self.metrics.counter("ingest_write_batches").inc(
+            (n_grants > 0) + (sum(n_blocks) > 0))
+        self.metrics.gauge("prefix_shard_refined").set(
+            self.kv.prefix.shard_stats["refined_queries"])
         return admitted
 
     def _resolve_page_tables(self) -> None:
@@ -410,37 +426,59 @@ class Server:
         for (rid, _), p in zip(pairs, phys):
             tables[rid].append(p)
         self.page_tables = tables
-        self.stats["page_translations"] += len(pairs)
-        self.stats["translation_batches"] += 1
+        self.metrics.counter("page_translations").inc(len(pairs))
+        self.metrics.counter("translation_batches").inc()
 
     def step(self, max_len: int = 128) -> None:
         """One scheduler tick: admit + decode one token for all running.
         Admission drains the queue up to the batch limit and commits
         the whole admission's metadata with one plan per index."""
-        admits: List[Request] = []
-        while self.queue and len(self.running) + len(admits) < self.max_batch:
-            admits.append(self.queue.pop(0))
-        if admits:
-            self.running.extend(self._admit(admits, max_len))
-        if self.running:
-            self._resolve_page_tables()
-        finished = []
-        for req in self.running:
-            tok = jnp.asarray([req.out[-1]], jnp.int32)
-            pos = jnp.asarray([req.pos], jnp.int32)
-            logits, self.caches[req.rid] = self.model.decode_step(
-                self.params, tok, self.caches[req.rid], pos)
-            self.stats["decode_steps"] += 1
-            req.pos += 1
-            nxt = int(jnp.argmax(logits[0]))
-            req.out.append(nxt)
-            if len(req.out) >= req.max_new or req.pos >= max_len - 1:
-                req.done = True
-                finished.append(req)
-        for req in finished:
-            self.running.remove(req)
-            del self.caches[req.rid]
-            self.page_tables.pop(req.rid, None)
+        with _OBS.span("serve.tick", queued=len(self.queue),
+                       running=len(self.running)):
+            admits: List[Request] = []
+            while (self.queue
+                   and len(self.running) + len(admits) < self.max_batch):
+                admits.append(self.queue.pop(0))
+            served = False
+            if admits:
+                admitted = self._admit(admits, max_len)
+                self.running.extend(admitted)
+                served |= bool(admitted)
+            if self.running:
+                self._resolve_page_tables()
+            finished = []
+            with _OBS.span("serve.decode", width=len(self.running)):
+                for req in self.running:
+                    tok = jnp.asarray([req.out[-1]], jnp.int32)
+                    pos = jnp.asarray([req.pos], jnp.int32)
+                    logits, self.caches[req.rid] = self.model.decode_step(
+                        self.params, tok, self.caches[req.rid], pos)
+                    self.metrics.counter("decode_steps").inc()
+                    served = True
+                    req.pos += 1
+                    nxt = int(jnp.argmax(logits[0]))
+                    req.out.append(nxt)
+                    if len(req.out) >= req.max_new or req.pos >= max_len - 1:
+                        req.done = True
+                        finished.append(req)
+            for req in finished:
+                self.running.remove(req)
+                del self.caches[req.rid]
+                self.page_tables.pop(req.rid, None)
+            if served:
+                self._first_service()
+
+    def _first_service(self) -> None:
+        """Close the recovery → first-token-served window: called on the
+        first tick after ``crash_and_recover`` that emitted a token."""
+        if self._recover_t0 is None:
+            return
+        t1 = time.perf_counter_ns()
+        dt = t1 - self._recover_t0
+        self.metrics.gauge("recovery_time_to_first_served_us").set(
+            dt // 1000)
+        _OBS.add_span("recovery.time_to_first_served", self._recover_t0, t1)
+        self._recover_t0 = None
 
     def run_until_drained(self, max_len: int = 128,
                           max_ticks: int = 1000) -> List[Request]:
@@ -460,8 +498,11 @@ class Server:
         survives, so warm prefixes skip re-prefill.  Recovery ends with
         a prefix-range warmup pass (one batched scan sweep) so the
         first post-restart admissions probe a warm snapshot."""
-        self.pmem.crash(mode="powerfail")
-        self.stats["warm_prefixes_restored"] = self.kv.recover()
-        self.caches.clear()
-        self.running.clear()
-        self.page_tables.clear()
+        self._recover_t0 = time.perf_counter_ns()
+        with _OBS.span("serve.recover"):
+            self.pmem.crash(mode="powerfail")
+            self.metrics.gauge("warm_prefixes_restored").set(
+                self.kv.recover())
+            self.caches.clear()
+            self.running.clear()
+            self.page_tables.clear()

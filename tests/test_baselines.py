@@ -166,3 +166,58 @@ def test_fixed_durability(factory):
     keys = keys_for(5, 120)
     ops = [("insert", k, k + 1) for k in keys]
     assert audit_durability(factory, ops) == []
+
+
+# ----------------------------------------------------------------------
+# counter honesty: native updates are real, counted PM writes
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("factory", [
+    lambda p: FastFair(p, fixed=True),
+    lambda p: CCEH(p, fixed=True),
+    LevelHashing,
+], ids=["fastfair", "cceh", "level"])
+def test_native_update_is_counted(factory):
+    pmem = PMem()
+    idx = factory(pmem)
+    keys = keys_for(6, 200)
+    for k in keys:
+        assert idx.insert(k, k + 1)
+    # a value-changing update really changes the value and pays for it
+    c0 = pmem.counters.snapshot()
+    assert idx.update(keys[0], 777)
+    d = pmem.counters.delta(c0)
+    assert idx.lookup(keys[0]) == 777
+    assert d.stores >= 1 and d.clwb >= 1 and d.fence >= 1
+    # no-op elision: updating to the current value issues no flush
+    c0 = pmem.counters.snapshot()
+    assert idx.update(keys[0], 777)
+    d = pmem.counters.delta(c0)
+    assert d.stores == 0 and d.clwb == 0 and d.fence == 0
+    # update of an absent key falls through to insert
+    absent = max(keys) + 12345
+    assert idx.update(absent, 42)
+    assert idx.lookup(absent) == 42
+    idx.check_invariants()
+
+
+@pytest.mark.parametrize("factory", [
+    lambda p: FastFair(p, fixed=True),
+    lambda p: CCEH(p, fixed=True),
+    LevelHashing,
+], ids=["fastfair", "cceh", "level"])
+def test_region_account_covers_all_traffic(factory):
+    """Baselines declare _region_prefixes, the prefixes cover every
+    region they allocate, and — as the sole writer on the PMem — the
+    per-region store account reproduces the global store counter, so
+    the foreign-writer gate cannot silently under-attribute."""
+    pmem = PMem()
+    idx = factory(pmem)
+    assert idx._region_prefixes, "baseline must declare its regions"
+    keys = keys_for(7, 300)
+    for k in keys:
+        idx.insert(k, k + 1)
+    for k in keys[:50]:
+        idx.update(k, k + 2)
+    names = [r.name for r in pmem.regions.values()]
+    assert names and all(n.startswith(idx._region_prefixes) for n in names)
+    assert idx._write_account() == pmem.counters.stores

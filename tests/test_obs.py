@@ -1,0 +1,335 @@
+"""Tests for the repro.obs telemetry subsystem: span nesting, the
+histogram-vs-numpy percentile oracle, registry merge semantics,
+disabled-mode no-op behavior, trace-JSON schema round-trip, and the
+end-to-end guarantees the benchmarks rely on (exact per-wave counter
+attribution, serving stats view, recovery span)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import PCLHT, PMem, Plan
+from repro.core.ycsb import generate, run_workload
+from repro.obs import (Histogram, MetricsRegistry, MetricsView, Recorder,
+                       bucket_index, bucket_upper, chrome_trace,
+                       validate_chrome_trace)
+
+
+@pytest.fixture(autouse=True)
+def _clean_recorder():
+    obs.disable()
+    obs.reset()
+    yield
+    obs.disable()
+    obs.reset()
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+def test_span_nesting_and_ordering():
+    obs.enable()
+    with obs.span("outer", a=1):
+        with obs.span("mid") as m:
+            m.set(b=2)
+            with obs.span("inner"):
+                pass
+        with obs.span("mid2"):
+            pass
+    spans = obs.spans()
+    assert [s.name for s in sorted(spans, key=lambda s: s.ts)] == \
+        ["outer", "mid", "inner", "mid2"]
+    by_name = {s.name: s for s in spans}
+    assert by_name["outer"].parent_id is None
+    assert by_name["mid"].parent_id == by_name["outer"].span_id
+    assert by_name["inner"].parent_id == by_name["mid"].span_id
+    assert by_name["mid2"].parent_id == by_name["outer"].span_id
+    # containment: children start no earlier and end no later
+    for child, parent in (("mid", "outer"), ("inner", "mid")):
+        c, p = by_name[child], by_name[parent]
+        assert c.ts >= p.ts
+        assert c.ts + c.dur <= p.ts + p.dur
+    assert by_name["mid"].attrs["b"] == 2
+
+
+def test_add_span_external_timing():
+    obs.enable()
+    import time
+    t0 = time.perf_counter_ns()
+    t1 = t0 + 5_000_000
+    sp = obs.add_span("recovery.time_to_first_served", t0, t1, n=3)
+    assert sp.dur == 5_000_000
+    assert obs.spans("recovery.time_to_first_served") == [sp]
+
+
+def test_disabled_mode_is_noop():
+    assert not obs.enabled()
+    sp = obs.span("anything", big_attr=list(range(100)))
+    assert not sp  # falsy -> `if sp:` guards skip snapshot work
+    with sp as inner:
+        inner.set(x=1)  # accepted, discarded
+    assert obs.spans() == []
+    assert not obs.add_span("x", 0, 10)
+
+
+def test_recorder_isolation():
+    r = Recorder()
+    r.enable()
+    with r.span("private"):
+        pass
+    assert len(r.spans) == 1
+    assert obs.spans() == []  # the global recorder saw nothing
+
+
+# ---------------------------------------------------------------------------
+# histogram vs numpy percentile oracle
+# ---------------------------------------------------------------------------
+def test_bucket_roundtrip_exact_below_subs():
+    for v in range(64):
+        idx = bucket_index(v)
+        assert bucket_upper(idx) >= v
+        assert bucket_index(bucket_upper(idx)) == idx
+
+
+def test_bucket_monotone():
+    vals = [0, 1, 31, 32, 33, 63, 64, 100, 1000, 10**6, 10**12, (1 << 62)]
+    idxs = [bucket_index(v) for v in vals]
+    assert idxs == sorted(idxs)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_percentile_matches_numpy_oracle(seed):
+    rng = np.random.default_rng(seed)
+    # mixed scales: sub-bucket-exact small values and wide log range
+    x = np.concatenate([
+        rng.integers(0, 32, 500),
+        rng.integers(32, 5000, 500),
+        (10 ** rng.uniform(3, 9, 1000)).astype(np.int64),
+    ])
+    h = Histogram()
+    h.record_many(x)
+    assert h.n == x.size
+    for q in (1, 10, 25, 50, 75, 90, 95, 99, 99.9, 100):
+        oracle = int(np.percentile(x, q, method="inverted_cdf"))
+        # bucketing is monotone, so the histogram percentile is exactly
+        # the oracle value's bucket upper bound
+        assert h.percentile(q) == bucket_upper(bucket_index(oracle)), q
+        # relative bucket error is bounded by one sub-bucket (~3.1%)
+        assert h.percentile(q) >= oracle
+        if oracle >= 32:
+            assert h.percentile(q) <= oracle * (1 + 2 / 32)
+
+
+def test_histogram_merge_equals_union():
+    rng = np.random.default_rng(3)
+    a, b = rng.integers(1, 10**8, 1000), rng.integers(1, 10**8, 1500)
+    ha, hb, hu = Histogram(), Histogram(), Histogram()
+    ha.record_many(a)
+    hb.record_many(b)
+    hu.record_many(np.concatenate([a, b]))
+    ha.merge(hb)
+    assert ha.n == hu.n and ha.total == hu.total
+    assert (ha.counts == hu.counts).all()
+    for q in (50, 95, 99):
+        assert ha.percentile(q) == hu.percentile(q)
+
+
+def test_histogram_record_batch():
+    h = Histogram()
+    h.record_batch(10_000, 10)  # 10 ops at mean 1000
+    assert h.n == 10 and h.total == 10_000
+    assert h.percentile(50) == bucket_upper(bucket_index(1000))
+
+
+def test_histogram_empty():
+    h = Histogram()
+    assert h.percentile(50) == 0 and h.mean == 0.0
+    assert h.summary() == {"count": 0, "mean": 0.0, "p50": 0,
+                           "p95": 0, "p99": 0}
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_registry_merge_across_shards():
+    shards = []
+    for i in range(3):
+        r = MetricsRegistry()
+        r.counter("ops").inc(10 * (i + 1))
+        r.gauge("depth").set(i + 1)
+        r.histogram("lat").record_many([100 * (i + 1)] * 5)
+        shards.append(r)
+    total = MetricsRegistry()
+    for r in shards:
+        total.merge(r)
+    assert total.counter("ops").value == 60       # counters sum
+    assert total.gauge("depth").value == 3        # gauges take the max
+    assert total.histogram("lat").n == 15         # histograms bucket-sum
+    assert total.as_dict() == {"ops": 60, "depth": 3}
+
+
+def test_registry_type_conflict_raises():
+    r = MetricsRegistry()
+    r.counter("x")
+    with pytest.raises(ValueError):
+        r.gauge("x")
+
+
+def test_metrics_view_read_only():
+    r = MetricsRegistry()
+    r.counter("plans").inc(2)
+    r.gauge("width").set(7)
+    v = MetricsView(r)
+    assert v["plans"] == 2 and v["width"] == 7
+    assert dict(v) == {"plans": 2, "width": 7}
+    assert len(v) == 2 and "plans" in v
+    with pytest.raises(TypeError):
+        v["plans"] = 5
+    with pytest.raises(TypeError):
+        del v["plans"]
+    with pytest.raises(KeyError):
+        v["missing"]
+    r.counter("plans").inc()  # live view, not a copy
+    assert v["plans"] == 3
+
+
+# ---------------------------------------------------------------------------
+# trace JSON schema round-trip
+# ---------------------------------------------------------------------------
+def test_trace_schema_roundtrip(tmp_path):
+    obs.enable()
+    with obs.span("plan.execute", n_ops=4):
+        with obs.span("plan.wave", kind="read", wave=0, width=4):
+            pass
+    obs.disable()
+    path = tmp_path / "trace.json"
+    obj = obs.write_trace(str(path))
+    assert validate_chrome_trace(obj) == []
+    loaded = json.loads(path.read_text())
+    assert loaded == obj
+    assert validate_chrome_trace(loaded) == []
+    evs = loaded["traceEvents"]
+    assert [e["name"] for e in evs] == ["plan.execute", "plan.wave"]
+    assert evs[0]["ph"] == "X" and evs[0]["cat"] == "plan"
+    assert evs[1]["args"]["parent_id"] == evs[0]["args"]["span_id"]
+    assert evs[1]["args"]["kind"] == "read"
+
+
+def test_trace_validator_catches_bad_events():
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": [{}]}) != []
+    bad = {"traceEvents": [
+        {"name": "a", "cat": "a", "ph": "X", "ts": 0, "dur": 1,
+         "pid": 1, "tid": 1, "args": {"span_id": 1, "parent_id": 99}}]}
+    assert any("parent_id" in e for e in validate_chrome_trace(bad))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: exact per-wave counter attribution
+# ---------------------------------------------------------------------------
+def test_plan_wave_attribution_exact():
+    pm = PMem()
+    idx = PCLHT(pm, n_buckets=128)
+    wl = generate("A", 600, 600, seed=11)
+    run_workload(idx, wl, phase="load", batch_lookups=True)
+    obs.reset()
+    obs.enable()
+    c0 = pm.counters.snapshot()
+    run_workload(idx, wl, phase="run", batch_lookups=True)
+    d = pm.counters.delta(c0)
+    obs.disable()
+    waves = obs.spans("plan.wave")
+    assert waves, "no plan.wave spans recorded"
+    for field in ("clwb", "fence", "stores", "loads"):
+        total = sum(w.attrs[field] for w in waves)
+        assert total == getattr(d, field), field
+
+
+def test_single_op_plan_emits_wave_span():
+    pm = PMem()
+    idx = PCLHT(pm, n_buckets=64)
+    obs.enable()
+    plan = Plan()
+    plan.put(42, 43)
+    idx.execute(plan)
+    obs.disable()
+    waves = obs.spans("plan.wave")
+    assert len(waves) == 1
+    assert waves[0].attrs["kind"] == "write"
+    assert waves[0].attrs["clwb"] >= 1 and waves[0].attrs["fence"] >= 1
+
+
+def test_group_commit_span_counts_close_traffic():
+    pm = PMem()
+    r = pm.alloc("t", 64)
+    obs.enable()
+    with pm.group_commit():
+        for i in range(16):
+            pm.store(r, i, i + 1)
+            pm.clwb(r, i)
+        pm.fence()
+    obs.disable()
+    spans = obs.spans("pmem.group_commit")
+    assert len(spans) == 1
+    sp = spans[0]
+    # 16 words = 2 cache lines -> 2 clwb at close + 1 commit fence
+    assert sp.attrs["clwb"] == 2 and sp.attrs["fence"] == 1
+    assert sp.attrs["stores"] == 16 and not sp.attrs["aborted"]
+
+
+def test_cas_counts_compare_load():
+    pm = PMem()
+    r = pm.alloc("t", 8)
+    pm.store(r, 0, 5)
+    loads0 = pm.counters.loads
+    assert pm.cas(r, 0, 5, 6)
+    assert pm.counters.loads == loads0 + 1
+    assert not pm.cas(r, 0, 5, 7)  # mismatch also pays the load
+    assert pm.counters.loads == loads0 + 2
+
+
+# ---------------------------------------------------------------------------
+# serving engine: stats view + recovery span
+# ---------------------------------------------------------------------------
+class _StubModel:
+    cfg = None  # Server.__init__ reads only model.cfg
+
+
+def _make_server():
+    from repro.serving.engine import Server
+    return Server(_StubModel(), params=None, page_size=8, n_pages=32)
+
+
+def test_server_stats_is_metrics_view():
+    server = _make_server()
+    assert isinstance(server.stats, MetricsView)
+    assert server.stats["decode_steps"] == 0
+    assert set(server.stats) >= {
+        "prefill_tokens", "prefix_hits", "decode_steps",
+        "page_translations", "translation_batches",
+        "warm_prefixes_restored", "ingest_write_batches",
+        "prefix_shard_refined"}
+    with pytest.raises(TypeError):
+        server.stats["decode_steps"] = 1
+    server.metrics.counter("decode_steps").inc(4)
+    assert server.stats["decode_steps"] == 4
+
+
+def test_server_recovery_time_to_first_served():
+    server = _make_server()
+    server.kv.prefix.insert(123, 7 + 1)
+    obs.enable()
+    server.crash_and_recover()
+    assert server._recover_t0 is not None
+    assert len(obs.spans("serve.recover")) == 1
+    server._first_service()  # the first served token closes the window
+    obs.disable()
+    assert server._recover_t0 is None
+    spans = obs.spans("recovery.time_to_first_served")
+    assert len(spans) == 1 and spans[0].dur >= 0
+    assert server.stats["recovery_time_to_first_served_us"] >= 0
+    assert server.stats["warm_prefixes_restored"] == 1
+    server._first_service()  # idempotent once closed
+    assert len(obs.spans("recovery.time_to_first_served")) == 1

@@ -28,11 +28,16 @@ KERNELS = ROOT / "src" / "repro" / "kernels"
 README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition",
                    "conflict")
 TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
-                     "docs/PMEM_MODEL.md", "docs/API.md")
+                     "docs/PMEM_MODEL.md", "docs/API.md",
+                     "docs/OBSERVABILITY.md")
 # the public-surface anchors docs/API.md must keep documenting
 API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
                    "open_index", "lookup_batch", "scan_batch",
                    "write_batch")
+# the telemetry surface docs/OBSERVABILITY.md must keep documenting
+OBS_DOC_ANCHORS = ("obs.span", "plan.wave", "pmem.group_commit",
+                   "recovery.time_to_first_served", "MetricsRegistry",
+                   "Histogram", "--trace")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -83,6 +88,13 @@ def main() -> int:
             if anchor not in api_text:
                 errors.append(f"docs/API.md no longer documents "
                               f"{anchor!r} (public-surface drift)")
+    obs_doc = ROOT / "docs" / "OBSERVABILITY.md"
+    if obs_doc.exists():
+        obs_text = obs_doc.read_text()
+        for anchor in OBS_DOC_ANCHORS:
+            if anchor not in obs_text:
+                errors.append(f"docs/OBSERVABILITY.md no longer documents "
+                              f"{anchor!r} (telemetry-surface drift)")
     for path in files:
         errors.extend(check_file(path, kernel_pkgs))
     for e in errors:
