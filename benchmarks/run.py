@@ -45,6 +45,11 @@ def main() -> None:
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record the whole run with the obs tracer and "
                          "write a Chrome-trace JSON to PATH")
+    ap.add_argument("--shards", type=int, default=8,
+                    help="max shard count of the ycsb shard-scaling "
+                         "sweep (0 or 1 disables it)")
+    ap.add_argument("--streams", type=int, default=4,
+                    help="client streams driving the sharded sweep")
     args = ap.parse_args()
     if args.trace:
         from repro import obs
@@ -62,7 +67,8 @@ def main() -> None:
     n_load = 4000 if args.quick else 10000
     n_run = 4000 if args.quick else 10000
     sections = {
-        "ycsb": lambda: ycsb.run(n_load, n_run),
+        "ycsb": lambda: ycsb.run(n_load, n_run, shards=args.shards,
+                                 streams=args.streams),
         "counters": lambda: counters.run(
             n_load=2000 if args.quick else 5000,
             n_measure=500 if args.quick else 2000),
@@ -119,12 +125,20 @@ def main() -> None:
         # ycsb_latency/all row (0.0 when ycsb didn't run this pass)
         lat = {r["name"].split(".", 1)[1]: r["value"] for r in flat
                if r["name"].startswith("ycsb_latency/all.")}
+        # shard-scaling headline: the modeled-makespan ratio of the
+        # max-shard column over the 1-shard column (one per target)
+        scaling = {r["name"].split("/", 1)[1].split(".", 1)[0]: r["value"]
+                   for r in flat if r["name"].startswith("ycsb_sharded/")
+                   and "_scaling_" in r["name"]}
         record = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "commit": _git_commit(),
             "quick": bool(args.quick),
             "n_load": n_load,
             "n_run": n_run,
+            "shards": args.shards,
+            "streams": args.streams,
+            "sharded_scaling": scaling,
             "plan_waves_total": total_waves,
             "plan_mean_wave_width": (total_wave_ops / total_waves
                                      if total_waves else 0.0),
@@ -142,12 +156,16 @@ def main() -> None:
             except ValueError:
                 print(f"warning: {args.json} held invalid JSON; restarting "
                       "the trajectory")
-        # one trajectory row per commit: a re-run (or a partial --only
-        # run) replaces its own entry instead of appending a duplicate
+        # one trajectory row per (commit, shards, streams): a re-run
+        # (or a partial --only run) replaces its own entry instead of
+        # appending a duplicate, and sharded sweeps at different
+        # geometries dedup independently exactly like single-stream rows
         if record["commit"] is not None:
+            key = (record["commit"], record["shards"], record["streams"])
             dropped = len(history)
             history = [r for r in history
-                       if r.get("commit") != record["commit"]]
+                       if (r.get("commit"), r.get("shards"),
+                           r.get("streams")) != key]
             dropped -= len(history)
             if dropped:
                 print(f"replacing {dropped} earlier run(s) of commit "

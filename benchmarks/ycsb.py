@@ -13,9 +13,9 @@ import time
 from typing import Callable, Dict, List
 
 from repro import obs
-from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem
+from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan
 from repro.core.baselines import CCEH, FastFair, LevelHashing
-from repro.core.ycsb import WORKLOADS, generate, run_workload
+from repro.core.ycsb import WORKLOADS, generate, run_workload, value_of
 from repro.obs import Histogram
 
 ORDERED = {
@@ -330,6 +330,159 @@ def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
     return rows
 
 
+def _chunk_plans(ops, chunk: int):
+    return [Plan.from_ops(ops[i:i + chunk])
+            for i in range(0, len(ops), chunk)]
+
+
+# the shard-scaling head-to-head: the paper's best unordered conversion
+# (P-CLHT) against its hand-crafted PM baseline (CCEH) on the same
+# plan/execute surface
+SHARDED_TARGETS = {
+    "P-CLHT": lambda p: PCLHT(p, n_buckets=512),
+    "CCEH": lambda p: CCEH(p, depth=4, fixed=True),
+}
+
+
+def bench_sharded(n: int = 65536, shard_counts=(1, 2, 4, 8),
+                  streams: int = 4, chunk: int = 8192):
+    """Shard-scaling sweep — RECIPE §7's multi-threaded YCSB scaling
+    recast on ``ShardedIndex``: S independent shards (own PMem each),
+    plans split per shard, N client streams admitted per tick by the
+    cross-stream conflict check (``distributed.streams``).
+
+    Reporting model (docs/SHARDING.md): a 1-core host serializes the
+    shard sub-plans, so each row carries two throughput columns —
+    ``C_kops_sS`` is the *modeled makespan* rate (routing + slowest
+    shard + merge per tick = the tick time of an S-device mesh) and
+    ``C_wall_kops_sS`` is the measured serial wall rate.  The scaling
+    claim (``C_scaling_Sx``) is over the modeled column; the wall
+    column keeps it honest about single-host cost.
+
+    Honesty checks built in: an untimed warm pass drives the *same*
+    stream/tick shapes as the timed pass (absorbing kernel compiles the
+    way a steady-state server would) and its per-op results must match
+    the value oracle exactly at every shard count; the timed pass is
+    throughput-only (``collect_results=False``) and its found-count
+    must stay exact.  Latency percentiles are tick-amortized
+    (``Histogram.record_batch`` of the modeled tick time)."""
+    from repro.distributed import ShardedIndex, StreamDriver
+    rows = []
+    wl = generate("C", n, n, seed=7)
+    load_plans = _chunk_plans(wl.load_ops, 8192)
+    run_plans = _chunk_plans(wl.run_ops, chunk)
+    oracle = [value_of(k) for _, k, _ in wl.run_ops]
+    n_ops = len(wl.run_ops)
+    s_max = max(shard_counts)
+    print(f"# shard-scaling sweep — YCSB-C over ShardedIndex, {n_ops} run "
+          f"ops, {streams} streams (modeled = S-device makespan; wall = "
+          f"1-core serial)")
+    for name, factory in SHARDED_TARGETS.items():
+        out = {"n": float(n), "streams": float(streams)}
+        base = None
+        for n_shards in shard_counts:
+            idx = ShardedIndex(factory, n_shards)
+            for pl in load_plans:  # untimed batched load
+                idx.execute(pl, collect_results=False)
+
+            def drive(collect, hist=None, mesh=None):
+                drv = StreamDriver(idx, streams, collect_results=collect,
+                                   lat_hist=hist)
+                tickets = [drv.streams[i % streams].submit(pl)
+                           for i, pl in enumerate(run_plans)]
+                kw = {} if mesh is None else {"mesh": mesh}
+                drv.run(**kw)
+                return drv, tickets
+
+            warm, tickets = drive(True)
+            got = [v for t in tickets for v in t.result]
+            assert got == oracle, \
+                f"{name} s{n_shards}: sharded results diverged from oracle"
+            hist = Histogram(f"sharded/{name}/s{n_shards}")
+            drv, _ = drive(False, hist=hist)
+            assert drv.stats["found"] == n_ops
+            kops = n_ops / drv.stats["critical_ns"] * 1e6
+            kops_wall = n_ops / drv.stats["wall_ns"] * 1e6
+            base = base or kops
+            out[f"C_kops_s{n_shards}"] = kops
+            out[f"C_wall_kops_s{n_shards}"] = kops_wall
+            out[f"C_lat_p50_us_s{n_shards}"] = hist.percentile(50) / 1e3
+            out[f"C_lat_p99_us_s{n_shards}"] = hist.percentile(99) / 1e3
+            line = (f"  {name:8s} S={n_shards}: modeled {kops:8.1f} "
+                    f"wall {kops_wall:8.1f} Kops/s "
+                    f"({kops / base:4.2f}x, p50 "
+                    f"{out[f'C_lat_p50_us_s{n_shards}']:.2f}us p99 "
+                    f"{out[f'C_lat_p99_us_s{n_shards}']:.2f}us)")
+            if n_shards == s_max:
+                out[f"C_scaling_{s_max}x"] = kops / base
+                # fused mesh fan-out column: one vmapped probe answers
+                # every shard (warm pass verifies it against the oracle)
+                warm_m, tickets_m = drive(True, mesh=True)
+                got_m = [v for t in tickets_m for v in t.result]
+                assert got_m == oracle, \
+                    f"{name}: mesh read path diverged from oracle"
+                drv_m, _ = drive(False, mesh=True)
+                assert drv_m.stats["found"] == n_ops
+                out[f"C_mesh_kops_s{n_shards}"] = (
+                    n_ops / drv_m.stats["critical_ns"] * 1e6)
+                line += (f"  mesh {out[f'C_mesh_kops_s{n_shards}']:8.1f} "
+                         f"Kops/s")
+            print(line)
+        rows.append((f"ycsb_sharded/{name}", out))
+    return rows
+
+
+def sharded_smoke(n: int = 4000, shards: int = 4, streams: int = 2) -> dict:
+    """Tiny traced multi-shard YCSB-A run (CI smoke) with the sharded
+    exact-attribution assert: the per-shard ``shard.plan`` /
+    ``shard.export`` span counter attributes must sum exactly to the
+    aggregate ``ShardedPMem`` counter delta of the traced region, and
+    the mesh read path must agree with the per-shard path bit for bit.
+    Returns the Chrome-trace dict (the caller writes/validates it)."""
+    from repro.distributed import ShardedIndex, StreamDriver
+    wl = generate("A", n, n, seed=7)
+    idx = ShardedIndex(lambda p: PCLHT(p, n_buckets=512), shards)
+    for pl in _chunk_plans(wl.load_ops, 2000):
+        idx.execute(pl, collect_results=False)
+    gets = Plan.from_ops([("lookup", k, 0)
+                          for _, k, _ in wl.load_ops[:1000]])
+    r_ps = idx.execute(gets, mesh=False)
+    r_mesh = idx.execute(gets, mesh=True)
+    assert r_mesh.mesh and not r_ps.mesh
+    assert (r_mesh.found, r_mesh.results) == (r_ps.found, r_ps.results), \
+        "mesh read path diverged from the per-shard path"
+    obs.reset()
+    obs.enable()
+    try:
+        c0 = idx.pmem.counters.snapshot()
+        drv = StreamDriver(idx, streams)
+        for i, pl in enumerate(_chunk_plans(wl.run_ops, 500)):
+            drv.streams[i % streams].submit(pl)
+        drv.run()
+        # run-phase inserts bumped shard epochs: this re-export happens
+        # under the tracer, so shard.export spans join the books
+        r_mesh2 = idx.execute(gets, mesh=True)
+        d = idx.pmem.counters.delta(c0)
+    finally:
+        obs.disable()
+    assert r_mesh2.found == r_mesh.found
+    spans = obs.spans("shard.plan") + obs.spans("shard.export")
+    for field in ("stores", "loads", "clwb", "fence", "lines_touched"):
+        got = sum(sp.attrs.get(field, 0) for sp in spans)
+        want = getattr(d, field)
+        assert got == want, (
+            f"per-shard attribution drifted from ShardedPMem counters: "
+            f"{field} {got} != {want}")
+    assert drv.stats["ticks"] > 0 and drv.stats["admitted_plans"] > 0
+    print(f"# sharded smoke: {shards} shards x {streams} streams, "
+          f"{drv.stats['ticks']} ticks ({drv.stats['multi_stream_ticks']} "
+          f"multi-stream, {drv.stats['deferred_plans']} deferred), "
+          f"{len(spans)} shard spans, clwb "
+          f"{sum(sp.attrs.get('clwb', 0) for sp in spans)} == {d.clwb} "
+          f"(exact)")
+    return obs.chrome_trace(obs.RECORDER)
+
+
 def trace_smoke(n: int = 2000) -> dict:
     """Tiny traced YCSB-A run on P-CLHT with the exact-attribution
     assert: the per-wave clwb/fence span attributes must sum to the run
@@ -359,7 +512,7 @@ def trace_smoke(n: int = 2000) -> dict:
 
 
 def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
-        batched: bool = True):
+        batched: bool = True, shards: int = 8, streams: int = 4):
     rows = []
     wls = ["LoadA", "A", "B", "C", "E"]
     all_hist = Histogram("ycsb/all")
@@ -398,6 +551,14 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
         rows.extend(bench_batched_scan(n_load, n_run))
         rows.extend(bench_batched_write(n_load, n_run))
         rows.extend(bench_mixed_plan(n_load, n_run))
+    if shards > 1:
+        # the sweep runs at paper-meaningful scale (n >= 64K keys) even
+        # in --quick mode: shard scaling at toy sizes only measures
+        # dispatch overhead
+        rows.extend(bench_sharded(
+            n=max(65536, n_run),
+            shard_counts=tuple(1 << i for i in range(shards.bit_length())),
+            streams=streams))
     return rows
 
 
@@ -411,9 +572,18 @@ if __name__ == "__main__":
                     help="only the traced attribution smoke run")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="write a Chrome-trace JSON of the run to PATH")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard-scaling sweep max shard count (with "
+                         "--smoke: run the sharded smoke instead)")
+    ap.add_argument("--streams", type=int, default=None,
+                    help="client streams for the sharded paths")
     args = ap.parse_args()
     if args.smoke:
-        trace_obj = trace_smoke()
+        if args.shards:
+            trace_obj = sharded_smoke(shards=args.shards,
+                                      streams=args.streams or 2)
+        else:
+            trace_obj = trace_smoke()
         if args.trace:
             with open(args.trace, "w") as f:
                 json.dump(trace_obj, f, indent=1)
@@ -426,7 +596,8 @@ if __name__ == "__main__":
         if args.trace:
             obs.reset()
             obs.enable()
-        run(n, n)
+        run(n, n, shards=args.shards if args.shards is not None else 8,
+            streams=args.streams or 4)
         if args.trace:
             obs.disable()
             obs.write_trace(args.trace)

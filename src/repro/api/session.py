@@ -20,15 +20,19 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan,
                     PlanResult)
+from ..core.baselines import CCEH
 from ..obs import MetricsRegistry, MetricsView
 
-# public index kinds; aliases accept the paper's P-* names (any case)
+# public index kinds; aliases accept the paper's P-* names (any case).
+# "cceh" is the hand-crafted PM baseline on the same plan surface —
+# the head-to-head comparator of the shard-scaling sweep.
 _KINDS = {
     "clht": PCLHT,
     "art": PART,
     "hot": PHOT,
     "bwtree": PBwTree,
     "masstree": PMasstree,
+    "cceh": CCEH,
 }
 
 
@@ -42,17 +46,35 @@ def _resolve_kind(kind: str):
 
 
 def open_index(kind: str, *, pmem: Optional[PMem] = None,
-               **index_kwargs) -> "Session":
+               shards: int = 1, scheme: Optional[str] = None,
+               mesh_reads: bool = False, **index_kwargs) -> "Session":
     """Open a converted PM index as a ``Session``.
 
-    ``kind`` is one of clht/art/hot/bwtree/masstree (or a P-* alias).
-    Pass an existing ``pmem`` to attach to a shared persistence domain
-    (e.g. re-attaching after a crash); extra kwargs go to the index
-    constructor (``n_buckets=...`` for clht).
+    ``kind`` is one of clht/art/hot/bwtree/masstree/cceh (or a P-*
+    alias).  Pass an existing ``pmem`` to attach to a shared
+    persistence domain (e.g. re-attaching after a crash); extra kwargs
+    go to the index constructor (``n_buckets=...`` for clht).
+
+    ``shards=S`` (a power of two > 1) opens a ``ShardedIndex``
+    instead: S independent shards of the kind, each on its own PMem,
+    with plans routed per key and executed shard-wise
+    (docs/SHARDING.md).  ``scheme`` overrides the routing
+    (hash/prefix) and ``mesh_reads=True`` turns on the fused mesh
+    fan-out for all-GET plans.  Sharded sessions own their
+    persistence domains, so ``pmem=`` cannot be combined with
+    ``shards=``.
     """
     name, factory = _resolve_kind(kind)
+    if shards > 1:
+        if pmem is not None:
+            raise ValueError("shards= builds one PMem per shard; "
+                             "pmem= cannot be shared across them")
+        from ..distributed import ShardedIndex
+        index = ShardedIndex(lambda pm: factory(pm, **index_kwargs),
+                             shards, scheme=scheme, mesh_reads=mesh_reads)
+        return Session(index, kind=name)
     pmem = pmem or PMem()
-    return Session(factory(pmem), kind=name)
+    return Session(factory(pmem, **index_kwargs), kind=name)
 
 
 class _Generation:
@@ -175,6 +197,23 @@ class Session:
     @property
     def ordered(self) -> bool:
         return self.index.ORDERED
+
+    @property
+    def shards(self) -> int:
+        """Shard count (1 for an unsharded session)."""
+        return getattr(self.index, "n_shards", 1)
+
+    def streams(self, n: int, *, collect_results: bool = True,
+                lat_hist=None) -> "StreamDriver":
+        """Multi-session harness: ``n`` independent client streams over
+        this session's index.  Each ``driver.streams[i]`` submits plans
+        independently; ``driver.tick()``/``driver.run()`` admit
+        non-conflicting head-of-queue plans per tick (cross-stream
+        conflict detection via kernels/conflict) and execute them as
+        one merged plan.  See ``repro.distributed.streams``."""
+        from ..distributed import StreamDriver
+        return StreamDriver(self.index, n, collect_results=collect_results,
+                            lat_hist=lat_hist)
 
     # -- plan execution ---------------------------------------------------
     def execute(self, plan: Plan, *, force_kernel: bool = False

@@ -7,7 +7,8 @@ from .pmem import (CACHELINE_BYTES, WORD_BYTES, WORDS_PER_LINE, CrashPoint,
 from .conditions import (CONVERSION_TABLE, Condition, ConversionSpec,
                          IndexSnapshot, RecipeIndex, crash_detect_fix,
                          register)
-from .plan import Op, OpKind, Plan, PlanResult, Wave, schedule_waves
+from .plan import (Op, OpKind, Plan, PlanResult, Wave, schedule_waves,
+                   split_by_shard)
 from .arena import Arena
 from .clht import PCLHT
 from .art import PART
@@ -23,6 +24,7 @@ __all__ = [
     "CONVERSION_TABLE", "Condition", "ConversionSpec", "IndexSnapshot",
     "RecipeIndex",
     "Op", "OpKind", "Plan", "PlanResult", "Wave", "schedule_waves",
+    "split_by_shard",
     "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
     "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
     "audit_durability", "run_crash_sweep",

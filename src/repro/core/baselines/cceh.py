@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from typing import Iterator, List, Optional, Tuple
 
+import numpy as np
+
 from ..arena import Arena
 from ..conditions import Condition, ConversionSpec, RecipeIndex, register
 from ..pmem import NULL, PMem
@@ -315,6 +317,42 @@ class CCEH(RecipeIndex):
     def keys(self) -> Iterator[int]:
         for k, _ in self.items():
             yield k
+
+    # ------------------------------------------------------------------
+    # data-plane export: plan/execute batched read path (the shard-
+    # scaling sweep's head-to-head comparator needs CCEH on the same
+    # surface as the converted indexes)
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Optional[dict]:
+        """Sorted run of the live (key, value) pairs.  CCEH has no
+        sorted iteration of its own (it's a hash table), but the shared
+        kernels/scan sorted-run probe only needs *a* deterministic
+        order, and ``items`` applies the reader's visibility rules —
+        so batched lookups stay bit-identical to scalar ``lookup``."""
+        items = sorted(self.items())
+        self._n_entries_hint = len(items)
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        return {"keys": keys, "vals": vals}
+
+    _n_entries_hint = 0
+    _MIN_REBUILD_BATCH = 64
+
+    def _rebuild_floor(self) -> int:
+        """The export walks every directory entry's segment once plus
+        an O(n log n) sort; scale the floor with the live entry count
+        like the tree indexes do."""
+        return max(self._MIN_REBUILD_BATCH, self._n_entries_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """Shared sorted-run kernel path (kernels/scan lower bound +
+        equality), bit-identical to scalar ``lookup``."""
+        from ...kernels.scan import snapshot_lookup
+        if snapshot.arrays is None:  # empty table
+            return None
+        return snapshot_lookup(snapshot, queries)
 
     def check_invariants(self) -> None:
         ks = list(self.keys())

@@ -1,3 +1,31 @@
-from . import compression, sharding
+"""Scale-out layer: ``ShardedIndex`` plan execution over a device
+mesh, the multi-stream workload driver, and the LLM-side partition
+rules (``sharding`` — consumed by ``launch/steps.py``).
 
-__all__ = ["compression", "sharding"]
+Submodules import lazily: ``sharding`` needs jax at import time, and
+the index-side modules (``sharded``/``streams``) must stay importable
+on jax-less hosts (their kernel paths degrade exactly like core's).
+"""
+
+import importlib
+
+_SUBMODULES = ("mesh", "sharded", "sharding", "streams")
+_EXPORTS = {
+    "ClientStream": "streams",
+    "ShardedIndex": "sharded",
+    "ShardedPMem": "sharded",
+    "ShardedPlanResult": "sharded",
+    "StreamDriver": "streams",
+    "StreamTicket": "streams",
+}
+
+__all__ = sorted(_SUBMODULES) + sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f".{name}", __name__)
+    if name in _EXPORTS:
+        mod = importlib.import_module(f".{_EXPORTS[name]}", __name__)
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,162 @@
+"""Device-mesh fan-out for sharded point lookups.
+
+``ShardedIndex`` executes general plans as per-shard sub-plans (each
+shard's own probe kernels against its own PMem).  For the all-GET hot
+path — the YCSB-C chunk, the serving decode tick — this module fuses
+all S shards' probes into ONE dispatch: every shard's sorted run is
+padded and stacked on a leading shard axis, queries are grouped by
+route and stacked the same way, and a vmapped lower-bound search
+answers all shards at once.
+
+Execution placement:
+
+* with >= S local devices, the vmapped probe is wrapped in
+  ``jax.shard_map`` over a 1-D ``("shard",)`` mesh, so each shard's
+  run and queries live on — and are probed by — their own device;
+* otherwise (the portable fallback, and the only path on a 1-device
+  host) the plain ``jax.vmap`` form runs the same program on one
+  device, bit-identical.
+
+64-bit keys are handled the same way the Pallas kernels handle them
+(kernels/scan): split into int32 halves with the low half XOR-biased,
+so signed lane compares realize unsigned 64-bit order without
+requiring jax x64 mode.  Found/value semantics are bit-identical to
+``kernels.scan.sorted_lookup`` (lower bound + key-equality check).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_BIAS = np.int32(-(1 << 31))
+
+
+@dataclasses.dataclass
+class StackedRuns:
+    """Device-ready stacked sorted runs: one row per shard."""
+
+    khi: object  # [S, N] int32 — key high halves (signed compare ok)
+    klo: object  # [S, N] int32 — key low halves, XOR-biased
+    vhi: object  # [S, N] int32 — value high halves
+    vlo: object  # [S, N] int32 — value low halves
+    n: object    # [S] int32 — live entries per shard
+    n_pad: int   # padded run length (power of two)
+    steps: int   # binary-search step budget = log2(n_pad)
+    n_shards: int
+
+
+def build_stacked(runs: Sequence[Optional[Tuple[np.ndarray, np.ndarray]]]
+                  ) -> StackedRuns:
+    """Stack per-shard sorted (keys, vals) runs (None = empty shard)
+    into one [S, N] device form, N padded to a common power of two."""
+    from ..kernels.probe import split64
+    import jax.numpy as jnp
+    S = len(runs)
+    n_live = [0 if r is None else int(r[0].shape[0]) for r in runs]
+    n_pad = 128
+    while n_pad < max(n_live + [1]):
+        n_pad <<= 1
+    khi = np.zeros((S, n_pad), np.int32)
+    klo = np.zeros((S, n_pad), np.int32)
+    vhi = np.zeros((S, n_pad), np.int32)
+    vlo = np.zeros((S, n_pad), np.int32)
+    for s, r in enumerate(runs):
+        if r is None:
+            continue
+        k, v = r
+        lo, hi = split64(np.asarray(k, np.int64))
+        khi[s, :n_live[s]] = hi
+        klo[s, :n_live[s]] = lo
+        lo, hi = split64(np.asarray(v, np.int64))
+        vhi[s, :n_live[s]] = hi
+        vlo[s, :n_live[s]] = lo
+    return StackedRuns(
+        khi=jnp.asarray(khi), klo=jnp.asarray(klo ^ _BIAS),
+        vhi=jnp.asarray(vhi), vlo=jnp.asarray(vlo),
+        n=jnp.asarray(n_live, dtype=jnp.int32), n_pad=n_pad,
+        steps=max(1, n_pad.bit_length()), n_shards=S)
+
+
+def _probe_one_shard(khi, klo, vhi, vlo, n, qhi, qlo, *, steps: int):
+    """Lower bound + equality over ONE shard's run: the per-device
+    program ``shard_map``/``vmap`` replicate across the shard axis."""
+    import jax
+    import jax.numpy as jnp
+
+    def less(ahi, alo, bhi, blo):
+        # unsigned-64 (a < b) on split halves; low halves pre-biased
+        return (ahi < bhi) | ((ahi == bhi) & (alo < blo))
+
+    lo = jnp.zeros(qhi.shape, jnp.int32)
+    hi = jnp.full(qhi.shape, n, jnp.int32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) >> 1
+        go_right = less(khi[mid], klo[mid], qhi, qlo)  # run[mid] < q
+        return jnp.where(go_right, mid + 1, lo), jnp.where(go_right, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    pos = jnp.clip(lo, 0, khi.shape[0] - 1)
+    found = (lo < n) & (khi[pos] == qhi) & (klo[pos] == qlo)
+    return found, jnp.where(found, vhi[pos], 0), jnp.where(found, vlo[pos], 0)
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_probe(n_shards: int, steps: int, use_shard_map: bool):
+    import jax
+    fn = jax.vmap(functools.partial(_probe_one_shard, steps=steps))
+    if use_shard_map:
+        from jax.sharding import PartitionSpec as P
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # pre-0.6 spelling
+            from jax.experimental.shard_map import shard_map
+        mesh = jax.make_mesh((n_shards,), ("shard",))
+        spec = P("shard")
+        fn = shard_map(fn, mesh=mesh, in_specs=(spec,) * 7,
+                       out_specs=(spec, spec, spec))
+    return jax.jit(fn)
+
+
+def mesh_devices(n_shards: int) -> bool:
+    """True when a real 1-D device mesh of ``n_shards`` is available."""
+    import jax
+    return len(jax.devices()) >= n_shards > 1
+
+
+def mesh_lookup(stacked: StackedRuns,
+                queries: Sequence[np.ndarray]
+                ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Probe all shards in one dispatch.  ``queries[s]`` is shard s's
+    (possibly empty) int64 query vector; returns per-shard
+    (found [Qs] bool, values [Qs] int64), bit-identical to probing each
+    shard's sorted run with ``kernels.scan.sorted_lookup``."""
+    from ..kernels.probe import combine64, split64
+    import jax.numpy as jnp
+    S = stacked.n_shards
+    assert len(queries) == S
+    q_len = [int(np.asarray(q).shape[0]) for q in queries]
+    q_pad = 8
+    while q_pad < max(q_len + [1]):
+        q_pad <<= 1
+    qhi = np.zeros((S, q_pad), np.int32)
+    qlo = np.zeros((S, q_pad), np.int32)
+    for s, q in enumerate(queries):
+        if q_len[s]:
+            lo, hi = split64(np.asarray(q, np.int64))
+            qhi[s, :q_len[s]] = hi
+            qlo[s, :q_len[s]] = lo
+    fn = _compiled_probe(S, stacked.steps, mesh_devices(S))
+    found, vhi, vlo = fn(stacked.khi, stacked.klo, stacked.vhi, stacked.vlo,
+                         stacked.n, jnp.asarray(qhi),
+                         jnp.asarray(qlo ^ _BIAS))
+    found = np.asarray(found)
+    vals = combine64(np.asarray(vlo), np.asarray(vhi))
+    return [(found[s, :q_len[s]], vals[s, :q_len[s]]) for s in range(S)]
+
+
+__all__ = ["StackedRuns", "build_stacked", "mesh_devices", "mesh_lookup"]

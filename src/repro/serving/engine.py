@@ -73,6 +73,7 @@ class Request:
     out: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0
     done: bool = False
+    sid: int = 0  # submitting session (0 = the server's default)
 
 
 class PagedKVManager:
@@ -318,18 +319,57 @@ class Server:
         self.metrics = MetricsRegistry()
         for name in ("prefill_tokens", "prefix_hits", "decode_steps",
                      "page_translations", "translation_batches",
-                     "ingest_write_batches"):
+                     "ingest_write_batches", "multi_session_ticks"):
             self.metrics.counter(name)
-        for name in ("warm_prefixes_restored", "prefix_shard_refined"):
+        for name in ("warm_prefixes_restored", "prefix_shard_refined",
+                     "sessions_connected"):
             self.metrics.gauge(name)
         self.stats = MetricsView(self.metrics)
         self._recover_t0: Optional[int] = None
+        self._next_sid = 1  # 0 is the server's own default session
+        self._rr_tick = 0  # rotating admission head across sessions
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+    def connect(self) -> "ServerSession":
+        """Open a client session.  Each session submits independently;
+        every tick's admission drains the sessions round-robin, so no
+        single stream can starve the others (``ServerSession``)."""
+        sid = self._next_sid
+        self._next_sid += 1
+        self.metrics.gauge("sessions_connected").set(self._next_sid - 1)
+        return ServerSession(self, sid)
+
+    def submit(self, prompt: List[int], max_new: int = 16, *,
+               sid: int = 0) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, list(prompt), max_new))
+        self.queue.append(Request(rid, list(prompt), max_new, sid=sid))
         return rid
+
+    def _pop_admits(self, budget: int) -> List[Request]:
+        """Pick up to ``budget`` queued requests, round-robin across
+        the sessions present in the queue (per-session FIFO order, and
+        the starting session rotates every tick).  With one session
+        this is exactly the old global FIFO."""
+        if budget <= 0 or not self.queue:
+            return []
+        by_sid: Dict[int, List[Request]] = {}
+        for r in self.queue:
+            by_sid.setdefault(r.sid, []).append(r)
+        sids = sorted(by_sid)
+        start = self._rr_tick % len(sids)
+        self._rr_tick += 1
+        admits: List[Request] = []
+        i = 0
+        while len(admits) < budget and any(by_sid.values()):
+            q = by_sid[sids[(start + i) % len(sids)]]
+            if q:
+                admits.append(q.pop(0))
+            i += 1
+        picked = set(map(id, admits))
+        self.queue = [r for r in self.queue if id(r) not in picked]
+        if len({r.sid for r in admits}) > 1:
+            self.metrics.counter("multi_session_ticks").inc()
+        return admits
 
     def _admit(self, reqs: List[Request], max_len: int) -> List[Request]:
         """Admit a request batch with ONE plan per index: one read
@@ -435,10 +475,7 @@ class Server:
         the whole admission's metadata with one plan per index."""
         with _OBS.span("serve.tick", queued=len(self.queue),
                        running=len(self.running)):
-            admits: List[Request] = []
-            while (self.queue
-                   and len(self.running) + len(admits) < self.max_batch):
-                admits.append(self.queue.pop(0))
+            admits = self._pop_admits(self.max_batch - len(self.running))
             served = False
             if admits:
                 admitted = self._admit(admits, max_len)
@@ -506,3 +543,29 @@ class Server:
             self.caches.clear()
             self.running.clear()
             self.page_tables.clear()
+
+
+class ServerSession:
+    """One client's handle on a shared ``Server``: requests submitted
+    here carry the session id, and the server's per-tick admission
+    drains all connected sessions round-robin (``Server._pop_admits``)
+    — many concurrent streams share one metadata plane without any
+    stream starving the rest."""
+
+    def __init__(self, server: Server, sid: int):
+        self.server = server
+        self.sid = sid
+
+    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        return self.server.submit(prompt, max_new, sid=self.sid)
+
+    @property
+    def queued(self) -> int:
+        return sum(r.sid == self.sid for r in self.server.queue)
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self.server.running if r.sid == self.sid]
+
+    def __repr__(self) -> str:
+        return f"ServerSession(sid={self.sid}, queued={self.queued})"

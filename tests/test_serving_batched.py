@@ -126,3 +126,24 @@ def test_prefix_lookup_batches_all_blocks(served):
     covered, pages = kv.prefix_lookup(tokens)
     assert covered == 2 * server.page_size
     assert pages == [10, 11]
+
+
+def test_multi_session_round_robin_admission(served):
+    """Concurrent client sessions share one admission plane: the
+    per-tick budget drains every connected session's FIFO round-robin,
+    so requests from many sessions admit in the same tick and no
+    session starves another."""
+    cfg, _, _ = served
+    server = _server(served)
+    a = server.connect()
+    b = server.connect()
+    assert a.sid != b.sid
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        a.submit([int(t) for t in rng.integers(1, cfg.vocab, 12)], max_new=8)
+        b.submit([int(t) for t in rng.integers(1, cfg.vocab, 12)], max_new=8)
+    assert a.queued == 3 and b.queued == 3
+    server.step(48)
+    assert server.stats["multi_session_ticks"] >= 1
+    assert {r.sid for r in server.running} == {a.sid, b.sid}
+    assert len(a.running) == 3 and len(b.running) == 3

@@ -29,7 +29,7 @@ README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition",
                    "conflict")
 TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
                      "docs/PMEM_MODEL.md", "docs/API.md",
-                     "docs/OBSERVABILITY.md")
+                     "docs/OBSERVABILITY.md", "docs/SHARDING.md")
 # the public-surface anchors docs/API.md must keep documenting
 API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
                    "open_index", "lookup_batch", "scan_batch",
@@ -38,6 +38,11 @@ API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
 OBS_DOC_ANCHORS = ("obs.span", "plan.wave", "pmem.group_commit",
                    "recovery.time_to_first_served", "MetricsRegistry",
                    "Histogram", "--trace")
+# the scale-out surface docs/SHARDING.md must keep documenting
+SHARDING_DOC_ANCHORS = ("ShardedIndex", "split_by_shard", "StreamDriver",
+                        "crash_shard", "recover_shard", "mesh_lookup",
+                        "shard.plan", "Reporting model", "critical_ns",
+                        "--shards")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -95,6 +100,13 @@ def main() -> int:
             if anchor not in obs_text:
                 errors.append(f"docs/OBSERVABILITY.md no longer documents "
                               f"{anchor!r} (telemetry-surface drift)")
+    shard_doc = ROOT / "docs" / "SHARDING.md"
+    if shard_doc.exists():
+        shard_text = shard_doc.read_text()
+        for anchor in SHARDING_DOC_ANCHORS:
+            if anchor not in shard_text:
+                errors.append(f"docs/SHARDING.md no longer documents "
+                              f"{anchor!r} (scale-out-surface drift)")
     for path in files:
         errors.extend(check_file(path, kernel_pkgs))
     for e in errors:
