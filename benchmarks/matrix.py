@@ -1,0 +1,403 @@
+"""Adversarial workload matrix — PiBench-style sweeps over the whole
+plan/execute surface (docs/WORKLOADS.md).
+
+Where ``benchmarks/ycsb.py`` validates the paper's uniform-key claims,
+this harness stresses the regimes uniform draws never reach: Zipfian
+skew (theta sweep), pinned hot-set contention (driven through
+``StreamDriver`` — the deferred-plan counter is the contention
+metric), shared-prefix variable-length string keys, and write-heavy
+sharded scaling.  Every row carries the persistence honesty counters
+(clwb/fence per op) next to its throughput, and every run's
+found/acked/scanned counts are asserted against the sequential
+``repro.data.workloads.replay`` oracle — a sweep that silently
+diverges from the model is a bug, not a data point.
+
+Mix schedules come from ``matrix_workload`` (the core.ycsb mix
+vocabulary re-targeted by distribution), so the same generated op
+streams drive PhaseExecutor plans, Session streams, and ShardedIndex
+fan-out unchanged.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+from repro.api.session import Session
+from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan
+from repro.core.baselines import CCEH, FastFair
+from repro.core.ycsb import run_workload
+from repro.data.workloads import matrix_workload, replay
+from repro.obs import Histogram
+
+# every plan-surface index: the five converted ordered indexes, the
+# two hand-crafted PM baselines (both ported to the batched surface)
+ORDERED = {
+    "FAST&FAIR": lambda p: FastFair(p, fixed=True),
+    "P-BwTree": PBwTree,
+    "P-Masstree": PMasstree,
+    "P-ART": PART,
+    "P-HOT": PHOT,
+}
+UNORDERED = {
+    "CCEH": lambda p: CCEH(p, depth=4, fixed=True),
+    "P-CLHT": lambda p: PCLHT(p, n_buckets=512),
+}
+TARGETS = {**ORDERED, **UNORDERED}
+
+THETAS = (0.0, 0.6, 0.9, 1.2)
+HOT_FRACS = (0.01, 0.1, 0.5)
+
+
+def _assert_oracle(wl, found: int, acked: int, scanned: int,
+                   what: str) -> None:
+    want = replay(wl.load_ops, wl.run_ops).counts()
+    got = (found, acked, scanned)
+    assert got == want, (f"{what}: {wl.name} diverged from replay "
+                         f"oracle: {got} != {want}")
+
+
+def _timed_run(factory: Callable, wl, *, tag: str,
+               max_batch: int = 4096) -> Dict[str, float]:
+    """Load + one timed batched run phase, asserted against the replay
+    oracle; returns the row columns (kops, honesty counters, latency
+    percentiles) keyed by ``tag``."""
+    pmem = PMem()
+    idx = factory(pmem)
+    run_workload(idx, wl, phase="load", batch_lookups=True)
+    hist = Histogram(wl.name)
+    c0 = pmem.counters.snapshot()
+    t0 = time.perf_counter()
+    done = run_workload(idx, wl, phase="run", batch_lookups=True,
+                        max_batch=max_batch, lat_hist=hist)
+    dt = time.perf_counter() - t0
+    d = pmem.counters.delta(c0)
+    _assert_oracle(wl, done["found"], done["acked"], done["scanned"],
+                   "matrix run")
+    n_ops = max(len(wl.run_ops), 1)
+    return {
+        f"{tag}_kops": n_ops / dt / 1e3,
+        f"{tag}_clwb_per_op": d.clwb / n_ops,
+        f"{tag}_fence_per_op": d.fence / n_ops,
+        f"{tag}_lat_p50_us": hist.percentile(50) / 1e3,
+        f"{tag}_lat_p99_us": hist.percentile(99) / 1e3,
+    }
+
+
+# ---------------------------------------------------------------------------
+# skew sweep
+# ---------------------------------------------------------------------------
+
+
+def bench_skew(n_load: int, n_run: int, mix: str = "F",
+               thetas=THETAS) -> List[Tuple[str, dict]]:
+    """Zipfian theta sweep of the read-modify-write mix (F: the only
+    mix whose *writes* land on existing keys, so skew concentrates
+    update traffic) over every plan-surface index.  theta=0 is the
+    uniform baseline column; the skewed columns show what repeated-key
+    conflict waves cost (more persist epochs) and what line reuse
+    saves (fewer distinct clwb lines per epoch)."""
+    rows = []
+    print(f"# matrix skew sweep — {mix} mix, theta in {tuple(thetas)}, "
+          f"Kops/s ({n_run} run ops)")
+    for name, factory in TARGETS.items():
+        out: Dict[str, float] = {"n_load": float(n_load),
+                                 "n_run": float(n_run)}
+        # untimed warm pass on a throwaway instance: absorbs kernel
+        # tracing so the theta=0 baseline column isn't the one paying
+        # first-compile cost
+        wl0 = matrix_workload(mix, n_load, n_run, dist="zipfian",
+                              theta=thetas[0], seed=11)
+        _timed_run(factory, wl0, tag="warm")
+        for theta in thetas:
+            wl = matrix_workload(mix, n_load, n_run, dist="zipfian",
+                                 theta=theta, seed=11)
+            out.update(_timed_run(factory, wl, tag=f"{mix}_t{theta:g}"))
+        rows.append((f"matrix/skew/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"t{t:g}: {out[f'{mix}_t{t:g}_kops']:7.1f} "
+            f"(clwb/op {out[f'{mix}_t{t:g}_clwb_per_op']:4.2f})"
+            for t in thetas))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# hot-set contention sweep (StreamDriver deferred-plan counter)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_plans(ops, chunk: int):
+    return [Plan.from_ops(ops[i:i + chunk])
+            for i in range(0, len(ops), chunk)]
+
+
+def _sharded_stream_run(factory: Callable, wl, *, shards: int,
+                        streams: int, chunk: int, scheme=None,
+                        what: str):
+    """Warm + timed StreamDriver pass over a fresh ShardedIndex each
+    (write mixes mutate state, so the timed pass needs a rebuilt
+    index); both passes asserted against the replay oracle.  Returns
+    (timed driver, timed seconds)."""
+    from repro.distributed import ShardedIndex, StreamDriver
+    want = replay(wl.load_ops, wl.run_ops).counts()
+
+    def drive():
+        idx = ShardedIndex(factory, shards, scheme=scheme)
+        for pl in _chunk_plans(wl.load_ops, 4096):
+            idx.execute(pl, collect_results=False)
+        drv = StreamDriver(idx, streams, collect_results=False)
+        for i, pl in enumerate(_chunk_plans(wl.run_ops, chunk)):
+            drv.streams[i % streams].submit(pl)
+        t0 = time.perf_counter()
+        drv.run()
+        dt = time.perf_counter() - t0
+        got = (drv.stats["found"], drv.stats["acked"],
+               drv.stats["scanned"])
+        assert got == want, (f"{what}: {wl.name} diverged from replay "
+                             f"oracle: {got} != {want}")
+        return drv, dt
+
+    drive()  # untimed warm pass: absorbs kernel tracing
+    return drive()
+
+
+def bench_hot(n_load: int, n_run: int, mix: str = "F",
+              hot_fracs=HOT_FRACS, streams: int = 2,
+              chunk: int = 64) -> List[Tuple[str, dict]]:
+    """Pinned hot-set sweep through ``Session.streams``: run ops are
+    chunked into small plans submitted round-robin across client
+    streams, so cross-stream writes (F's read-modify-write updates) to
+    the pinned set collide in the admission check.  ``deferred`` (the
+    ``stream_deferred_plans`` counter, read back through
+    ``Session.stats`` — the registry is the reporting surface, not the
+    driver object) is the matrix's contention metric;
+    ``deferred_frac`` normalizes it by submitted plans.  The
+    replay-oracle assert holds because the mix's counts are
+    order-independent across admission orders (reads target loaded
+    keys, updates always ack, inserts are unique fresh keys)."""
+    rows = []
+    print(f"# matrix hot-set sweep — {mix} mix x {streams} streams, "
+          f"hot_frac in {tuple(hot_fracs)} ({n_run} run ops, "
+          f"{chunk}-op plans)")
+    for name, factory in TARGETS.items():
+        out: Dict[str, float] = {"streams": float(streams),
+                                 "chunk": float(chunk)}
+        for hf in hot_fracs:
+            wl = matrix_workload(mix, n_load, n_run, dist="hotset",
+                                 hot_frac=hf, hot_op_frac=0.9, seed=11)
+            sess = Session(factory(PMem()), kind=name)
+            run_workload(sess.index, wl, phase="load", batch_lookups=True)
+            hist = Histogram(f"hot/{name}/hf{hf:g}")
+            drv = sess.streams(streams, collect_results=False,
+                               lat_hist=hist)
+            plans = _chunk_plans(wl.run_ops, chunk)
+            for i, pl in enumerate(plans):
+                drv.streams[i % streams].submit(pl)
+            t0 = time.perf_counter()
+            drv.run()
+            dt = time.perf_counter() - t0
+            _assert_oracle(wl, drv.stats["found"], drv.stats["acked"],
+                           drv.stats["scanned"], "hot-set stream run")
+            deferred = sess.stats["stream_deferred_plans"]
+            assert deferred == drv.stats["deferred_plans"], \
+                "Session.stats mirror drifted from driver stats"
+            tag = f"{mix}_hf{hf:g}"
+            out[f"{tag}_kops"] = len(wl.run_ops) / dt / 1e3
+            out[f"{tag}_deferred"] = float(deferred)
+            out[f"{tag}_deferred_frac"] = deferred / max(len(plans), 1)
+            out[f"{tag}_lat_p99_us"] = hist.percentile(99) / 1e3
+        rows.append((f"matrix/hot/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"hf{hf:g}: {out[f'{mix}_hf{hf:g}_kops']:7.1f} "
+            f"(deferred {out[f'{mix}_hf{hf:g}_deferred']:4.0f})"
+            for hf in hot_fracs))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# string-key column
+# ---------------------------------------------------------------------------
+
+
+def bench_string(n_load: int, n_run: int) -> List[Tuple[str, dict]]:
+    """Shared-prefix variable-length string keys on every index: the
+    mixed A column for all, plus the scan-heavy E column (range scans
+    racing inserts from the same clustered pool) for the ordered
+    indexes, and a range-sharded P-ART column routed with the
+    ``prefix@55`` scheme — encoded string keys occupy bits [58..3], and
+    lowercase ASCII pins bits 58..56, so bit 55 downward is the first
+    discriminating range split (docs/WORKLOADS.md)."""
+    rows = []
+    print(f"# matrix string-key column — clustered-prefix 1..7-byte "
+          f"keys, Kops/s ({n_run} run ops)")
+    for name, factory in TARGETS.items():
+        out: Dict[str, float] = {}
+        wl = matrix_workload("A", n_load, n_run, dist="zipfian", theta=0.9,
+                             keyspace="string", seed=11)
+        _timed_run(factory, wl, tag="warm")  # absorb kernel tracing
+        out.update(_timed_run(factory, wl, tag="A_str"))
+        if name in ORDERED:
+            wl_e = matrix_workload("E", n_load, n_run, dist="zipfian",
+                                   theta=0.9, keyspace="string", seed=11)
+            out.update(_timed_run(factory, wl_e, tag="E_str"))
+        rows.append((f"matrix/string/{name}", out))
+        scans = (f"  E: {out['E_str_kops']:7.1f}" if "E_str_kops" in out
+                 else "")
+        print(f"  {name:12s} A: {out['A_str_kops']:7.1f} "
+              f"(clwb/op {out['A_str_clwb_per_op']:4.2f}){scans}")
+    # range-sharded string keys: the prefix@55 routing column
+    wl = matrix_workload("E", n_load, n_run, dist="zipfian", theta=0.9,
+                         keyspace="string", seed=11)
+    drv, dt = _sharded_stream_run(PART, wl, shards=4, streams=2,
+                                  chunk=256, scheme="prefix@55",
+                                  what="sharded string run")
+    out = {"E_str_kops": len(wl.run_ops) / dt / 1e3,
+           "shards": 4.0, "streams": 2.0,
+           "E_str_deferred": float(drv.stats["deferred_plans"])}
+    rows.append(("matrix/sharded_string/P-ART", out))
+    print(f"  {'P-ART s4':12s} E: {out['E_str_kops']:7.1f} "
+          f"(prefix@55 range-sharded, deferred "
+          f"{out['E_str_deferred']:3.0f})")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# write-heavy sharded scaling column
+# ---------------------------------------------------------------------------
+
+
+def bench_sharded_writes(n: int, mixes=("A", "F"),
+                         shard_counts=(1, 2, 4, 8), streams: int = 4,
+                         chunk: int = 1024) -> List[Tuple[str, dict]]:
+    """Write-heavy sharded sweep: unlike the read-only scaling sweep in
+    benchmarks/ycsb.py, these mixes persist on every other op, so the
+    scaling column measures how well per-shard group-commit epochs
+    absorb a skewed write stream.  Reporting model as docs/SHARDING.md:
+    the scaling claim is over the modeled S-device makespan
+    (``critical_ns``); the wall column keeps single-host cost
+    honest."""
+    rows = []
+    s_max = max(shard_counts)
+    print(f"# matrix sharded write sweep — {'/'.join(mixes)} x shards "
+          f"{tuple(shard_counts)}, {streams} streams, zipf theta=0.6 "
+          f"({n} run ops; modeled = S-device makespan)")
+    targets = {"P-CLHT": lambda p: PCLHT(p, n_buckets=512),
+               "CCEH": lambda p: CCEH(p, depth=4, fixed=True)}
+    for name, factory in targets.items():
+        out: Dict[str, float] = {"n": float(n), "streams": float(streams)}
+        for mix in mixes:
+            wl = matrix_workload(mix, n, n, dist="zipfian", theta=0.6,
+                                 seed=11)
+            base = None
+            for n_shards in shard_counts:
+                drv, _dt = _sharded_stream_run(
+                    factory, wl, shards=n_shards, streams=streams,
+                    chunk=chunk, what=f"{name} s{n_shards} {mix} write run")
+                kops = n / drv.stats["critical_ns"] * 1e6
+                base = base or kops
+                out[f"{mix}_kops_s{n_shards}"] = kops
+                out[f"{mix}_wall_kops_s{n_shards}"] = (
+                    n / drv.stats["wall_ns"] * 1e6)
+                if n_shards == s_max:
+                    out[f"{mix}_scaling_{s_max}x"] = kops / base
+                    out[f"{mix}_deferred_s{s_max}"] = float(
+                        drv.stats["deferred_plans"])
+            print(f"  {name:8s} {mix}: " + "  ".join(
+                f"s{s}: {out[f'{mix}_kops_s{s}']:7.1f}"
+                for s in shard_counts)
+                + f"  ({out[f'{mix}_scaling_{s_max}x']:4.2f}x)")
+        rows.append((f"matrix/sharded_writes/{name}", out))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# CI smoke
+# ---------------------------------------------------------------------------
+
+
+def smoke(n: int = 600) -> dict:
+    """Tiny matrix smoke for CI: (1) theta=0.9 skew vs uniform on the
+    F mix on P-CLHT with the persistence-honesty assert — at
+    admission-granularity plans (32 ops) group commit must *amortize*
+    the skewed update stream (clwb AND fence per op no worse than the
+    uniform baseline), never hide it.  At giant single-plan batches
+    skew instead trades fences for clwb (repeated-key waves mean more
+    epochs) — docs/WORKLOADS.md documents both regimes; the small-plan
+    regime is the server-realistic one and the one asserted here.
+    (2) string-key scan-with-inserts (E mix) on P-ART vs the replay
+    oracle; (3) a hot-set 2-stream run through ``Session.streams``
+    asserting the contention counter fires (deferred > 0) and reads
+    back exactly through the metrics registry."""
+    out: Dict[str, float] = {}
+    # 1. skew honesty vs uniform baseline
+    per_op = {}
+    for tag, dist, theta in (("uniform", "zipfian", 0.0),
+                             ("skew", "zipfian", 0.9)):
+        wl = matrix_workload("F", n, n, dist=dist, theta=theta, seed=11)
+        cols = _timed_run(lambda p: PCLHT(p, n_buckets=512), wl, tag=tag,
+                          max_batch=32)
+        per_op[tag] = (cols[f"{tag}_clwb_per_op"],
+                       cols[f"{tag}_fence_per_op"])
+        out.update(cols)
+    assert per_op["skew"][0] <= per_op["uniform"][0] + 1e-9, (
+        f"skewed clwb/op regressed past uniform baseline: "
+        f"{per_op['skew'][0]:.3f} > {per_op['uniform'][0]:.3f}")
+    assert per_op["skew"][1] <= per_op["uniform"][1] + 1e-9, (
+        f"skewed fence/op regressed past uniform baseline: "
+        f"{per_op['skew'][1]:.3f} > {per_op['uniform'][1]:.3f}")
+    # 2. string keys + scans racing inserts
+    wl_e = matrix_workload("E", n, n, dist="zipfian", theta=0.9,
+                           keyspace="string", seed=11)
+    out.update(_timed_run(PART, wl_e, tag="E_str"))
+    # 3. hot-set contention through the Session registry
+    wl_h = matrix_workload("F", n, n, dist="hotset", hot_frac=0.01,
+                           hot_op_frac=0.9, seed=11)
+    sess = Session(PCLHT(PMem(), n_buckets=512), kind="clht")
+    run_workload(sess.index, wl_h, phase="load", batch_lookups=True)
+    drv = sess.streams(2, collect_results=False)
+    for i, pl in enumerate(_chunk_plans(wl_h.run_ops, 32)):
+        drv.streams[i % 2].submit(pl)
+    drv.run()
+    _assert_oracle(wl_h, drv.stats["found"], drv.stats["acked"],
+                   drv.stats["scanned"], "smoke hot-set run")
+    deferred = sess.stats["stream_deferred_plans"]
+    assert deferred == drv.stats["deferred_plans"] > 0, (
+        f"hot-set mix produced no cross-stream deferrals "
+        f"(deferred={deferred}) — contention metric is dead")
+    out["hot_deferred"] = float(deferred)
+    print(f"# matrix smoke: skew clwb/op {per_op['skew'][0]:.2f} <= "
+          f"uniform {per_op['uniform'][0]:.2f}, fence/op "
+          f"{per_op['skew'][1]:.2f} <= {per_op['uniform'][1]:.2f}; "
+          f"string-E scanned ok; hot-set deferred {deferred} > 0 "
+          f"(registry-exact)")
+    return out
+
+
+def run(n_load: int = 4000, n_run: int = 4000, *, shards: int = 8,
+        streams: int = 4) -> List[Tuple[str, dict]]:
+    rows = []
+    rows.extend(bench_skew(n_load, n_run))
+    rows.extend(bench_hot(n_load, n_run))
+    rows.extend(bench_string(max(n_load // 2, 500), max(n_run // 2, 500)))
+    rows.extend(bench_sharded_writes(
+        n=max(n_run, 4096),
+        shard_counts=tuple(1 << i for i in range(shards.bit_length())),
+        streams=streams))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workloads (CI-speed)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="only the tiny honesty/contention smoke run")
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--streams", type=int, default=4)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        n = 2000 if args.quick else 4000
+        run(n, n, shards=args.shards, streams=args.streams)

@@ -1,6 +1,9 @@
 """Benchmark harness — one section per paper table/figure.
 
   ycsb            Fig 4a (ordered), Fig 5 (unordered), §7.3 (WOART)
+  matrix          adversarial workload matrix: Zipfian skew, hot-set
+                  contention, string keys, sharded writes
+                  (docs/WORKLOADS.md)
   counters        Table 4 / Fig 4c-d (clwb, fence, lines-touched)
   crash_recovery  §7.5 (targeted crash states; bug re-finding)
   loc_report      Table 1 (conversion effort)
@@ -18,7 +21,8 @@ import subprocess
 import sys
 import time
 
-from . import counters, crash_recovery, loc_report, roofline_report, ycsb
+from . import (counters, crash_recovery, loc_report, matrix,
+               roofline_report, ycsb)
 
 
 def _git_commit():
@@ -69,6 +73,10 @@ def main() -> None:
     sections = {
         "ycsb": lambda: ycsb.run(n_load, n_run, shards=args.shards,
                                  streams=args.streams),
+        "matrix": lambda: matrix.run(
+            2000 if args.quick else 4000,
+            2000 if args.quick else 4000,
+            shards=args.shards, streams=args.streams),
         "counters": lambda: counters.run(
             n_load=2000 if args.quick else 5000,
             n_measure=500 if args.quick else 2000),

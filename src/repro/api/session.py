@@ -20,12 +20,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan,
                     PlanResult)
-from ..core.baselines import CCEH
+from ..core.baselines import CCEH, FastFair
 from ..obs import MetricsRegistry, MetricsView
 
 # public index kinds; aliases accept the paper's P-* names (any case).
-# "cceh" is the hand-crafted PM baseline on the same plan surface —
-# the head-to-head comparator of the shard-scaling sweep.
+# "cceh" and "fastfair" are the hand-crafted PM baselines on the same
+# plan surface — the head-to-head comparators of the shard-scaling
+# sweep and the adversarial workload matrix (benchmarks/matrix.py).
 _KINDS = {
     "clht": PCLHT,
     "art": PART,
@@ -33,6 +34,7 @@ _KINDS = {
     "bwtree": PBwTree,
     "masstree": PMasstree,
     "cceh": CCEH,
+    "fastfair": FastFair,
 }
 
 
@@ -50,8 +52,8 @@ def open_index(kind: str, *, pmem: Optional[PMem] = None,
                mesh_reads: bool = False, **index_kwargs) -> "Session":
     """Open a converted PM index as a ``Session``.
 
-    ``kind`` is one of clht/art/hot/bwtree/masstree/cceh (or a P-*
-    alias).  Pass an existing ``pmem`` to attach to a shared
+    ``kind`` is one of clht/art/hot/bwtree/masstree/cceh/fastfair (or
+    a P-* alias).  Pass an existing ``pmem`` to attach to a shared
     persistence domain (e.g. re-attaching after a crash); extra kwargs
     go to the index constructor (``n_buckets=...`` for clht).
 
@@ -210,10 +212,13 @@ class Session:
         independently; ``driver.tick()``/``driver.run()`` admit
         non-conflicting head-of-queue plans per tick (cross-stream
         conflict detection via kernels/conflict) and execute them as
-        one merged plan.  See ``repro.distributed.streams``."""
+        one merged plan.  The driver mirrors its admission telemetry
+        (``stream_deferred_plans`` — the contention signal — plus
+        ticks/admitted/merged counters) into this session's
+        ``stats``.  See ``repro.distributed.streams``."""
         from ..distributed import StreamDriver
         return StreamDriver(self.index, n, collect_results=collect_results,
-                            lat_hist=lat_hist)
+                            lat_hist=lat_hist, metrics=self.metrics)
 
     # -- plan execution ---------------------------------------------------
     def execute(self, plan: Plan, *, force_kernel: bool = False

@@ -16,7 +16,8 @@ from .hot import PHOT
 from .bwtree import PBwTree
 from .masstree import PMasstree
 from .crash_testing import (CrashReport, PMSnapshot, audit_durability,
-                            run_crash_sweep)
+                            group_commit_boundaries, plan_crash_sweep,
+                            plan_prefix_states, run_crash_sweep)
 
 __all__ = [
     "CACHELINE_BYTES", "WORD_BYTES", "WORDS_PER_LINE", "CrashPoint",
@@ -27,5 +28,6 @@ __all__ = [
     "split_by_shard",
     "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
     "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
-    "audit_durability", "run_crash_sweep",
+    "audit_durability", "group_commit_boundaries", "plan_crash_sweep",
+    "plan_prefix_states", "run_crash_sweep",
 ]

@@ -27,7 +27,8 @@ from typing import Iterator, List, Optional, Tuple
 import numpy as np
 
 from ..arena import Arena
-from ..conditions import Condition, ConversionSpec, RecipeIndex, register
+from ..conditions import (Condition, ConversionSpec, RecipeIndex,
+                          register, tracks_epoch)
 from ..pmem import NULL, PMem
 
 SLOTS_PER_BUCKET = 4
@@ -143,6 +144,7 @@ class CCEH(RecipeIndex):
                 return a.load(seg + off + 2 * s + 1)
         return None
 
+    @tracks_epoch
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL
         a = self.arena
@@ -175,6 +177,7 @@ class CCEH(RecipeIndex):
             finally:
                 a.unlock(seg)
 
+    @tracks_epoch
     def update(self, key: int, value: int) -> bool:
         """In-place value update: one counted store + clwb + fence on
         the value word (the key word never moves, so readers always see
@@ -202,6 +205,7 @@ class CCEH(RecipeIndex):
                 a.unlock(seg)
             return self.insert(key, value)  # absent -> insert path
 
+    @tracks_epoch
     def delete(self, key: int) -> bool:
         a = self.arena
         _, _, seg = self._seg_for(key)

@@ -28,8 +28,11 @@ from __future__ import annotations
 
 from typing import Iterator, List, Optional, Tuple
 
+import numpy as np
+
 from ..arena import Arena
-from ..conditions import Condition, ConversionSpec, RecipeIndex, register
+from ..conditions import (Condition, ConversionSpec, RecipeIndex,
+                          register, tracks_epoch)
 from ..pmem import NULL, PMem
 
 CAP = 16
@@ -51,6 +54,7 @@ SPEC = register(ConversionSpec(
 
 class FastFair(RecipeIndex):
     ORDERED = True
+    SHARD_SCHEME = "prefix"  # shards are key ranges: one subtree family
     spec = SPEC
 
     def __init__(self, pmem: PMem, fixed: bool = True):
@@ -183,6 +187,7 @@ class FastFair(RecipeIndex):
         a.clwb(node + vbase + i)
         a.fence()
 
+    @tracks_epoch
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL and value != NULL
         a = self.arena
@@ -218,6 +223,7 @@ class FastFair(RecipeIndex):
                 return i
         return None
 
+    @tracks_epoch
     def update(self, key: int, value: int) -> bool:
         """In-place value update: one counted store + clwb + fence on
         the value word.  Keys never move, so a reader sees old-or-new
@@ -244,6 +250,7 @@ class FastFair(RecipeIndex):
                 a.unlock(leaf)
             return self.insert(key, value)  # absent -> insert path
 
+    @tracks_epoch
     def delete(self, key: int) -> bool:
         a = self.arena
         while True:
@@ -396,6 +403,42 @@ class FastFair(RecipeIndex):
     def keys(self) -> Iterator[int]:
         for k, _ in self.items():
             yield k
+
+    # ------------------------------------------------------------------
+    # data-plane export: plan/execute batched read path (same shape as
+    # the CCEH port — the adversarial matrix drives FAST&FAIR through
+    # the identical kernels/scan sorted-run probe, and ORDERED=True
+    # gives it batched scans via the base ``_scan_export`` for free)
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Optional[dict]:
+        """Sorted run of the live (key, value) pairs.  ``items`` is the
+        FAIR sibling walk with the reader's visibility rules (first
+        non-NULL match, mid-shift duplicate skipping), so batched
+        lookups stay bit-identical to scalar ``lookup``."""
+        items = list(self.items())  # already ascending (leaf chain)
+        self._n_entries_hint = len(items)
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        return {"keys": keys, "vals": vals}
+
+    _n_entries_hint = 0
+    _MIN_REBUILD_BATCH = 64
+
+    def _rebuild_floor(self) -> int:
+        """The export walks the whole leaf chain; scale the stale-
+        snapshot floor with the live entry count like the tree
+        conversions do."""
+        return max(self._MIN_REBUILD_BATCH, self._n_entries_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """Shared sorted-run kernel path (kernels/scan lower bound +
+        equality), bit-identical to scalar ``lookup``."""
+        from ...kernels.scan import snapshot_lookup
+        if snapshot.arrays is None:  # empty tree
+            return None
+        return snapshot_lookup(snapshot, queries)
 
     def range_query(self, key_lo: int, key_hi: int) -> List[Tuple[int, int]]:
         return [(k, v) for k, v in self.items() if key_lo <= k <= key_hi]

@@ -16,12 +16,33 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import (Any, Callable, Dict, Iterator, List, Optional, Sequence,
                     Tuple)
 
 import numpy as np
 
 from .pmem import PMem, Region, CrashPoint
+
+
+def tracks_epoch(method):
+    """Wrap a hand-written mutator (the ported baselines' insert/
+    update/delete) so the snapshot epoch — and, inside ``_write_batch``,
+    the scoped *shard* epoch — advances exactly when the call stored to
+    PM.  The converted indexes bump inside their own write paths; a
+    baseline that skips this leaves its shard epochs frozen, and
+    ``_shard_refine`` would then serve every batched lookup from a
+    stale snapshot (missing keys the same plan just inserted).  Keying
+    on the store count preserves the no-op-update rule: a call that
+    writes nothing invalidates nothing."""
+    @functools.wraps(method)
+    def wrapped(self, *args, **kwargs):
+        before = self.pmem.counters.stores
+        result = method(self, *args, **kwargs)
+        if self.pmem.counters.stores != before:
+            self._bump_epoch()
+        return result
+    return wrapped
 
 
 class Condition(enum.Enum):

@@ -36,6 +36,7 @@ import numpy as np
 from .pmem import CrashPoint, PMem, Region
 
 Op = Tuple[str, int, int]  # (kind, key, value) — kind in {insert, delete, lookup}
+# plan_crash_sweep additionally accepts "update" (upsert) ops
 
 
 # ----------------------------------------------------------------------
@@ -254,6 +255,132 @@ def _post_crash_phase(index, expect: Dict[int, int], crashed: Optional[Op],
                 f"{tag}: post-crash write {key} lost (got {got!r})")
             return
     _verify(index, expect, crashed, report, tag + "+post")
+
+
+# ----------------------------------------------------------------------
+# group-commit crash-point sweep over the batched plan surface
+# ----------------------------------------------------------------------
+def group_commit_boundaries(pmem: PMem, run: Callable[[], None]) -> List[int]:
+    """Execute ``run()`` with a spy on ``pmem.group_commit`` and return
+    the store offset (relative to the call) of every *outermost* persist
+    epoch it opens.  Nested opens are free — only depth-0 boundaries are
+    durability events (the close emits the clwb batch + commit fence)."""
+    boundaries: List[int] = []
+    s0 = pmem.counters.stores
+    orig = pmem.group_commit
+
+    def spy(*args, **kwargs):
+        if pmem._group_depth == 0:
+            boundaries.append(pmem.counters.stores - s0)
+        return orig(*args, **kwargs)
+
+    pmem.group_commit = spy
+    try:
+        run()
+    finally:
+        pmem.group_commit = orig
+    return boundaries
+
+
+def plan_prefix_states(ops: Sequence[Op]) -> Tuple[Dict[int, set], Dict[int, int]]:
+    """Per key: every durable value the key may legally hold after a
+    crash anywhere in a batched plan over ``ops`` — ``None`` (never
+    persisted, or deleted) plus the value after each of its ops in
+    program order.  Group-commit epochs ack atomically and the wave
+    scheduler preserves per-key program order, so a recovered key must
+    sit at SOME prefix of its own op history.  Returns ``(states,
+    final_model)``."""
+    states: Dict[int, set] = {}
+    model: Dict[int, int] = {}
+    for kind, k, v in ops:
+        states.setdefault(k, {None})
+        if kind == "insert":
+            model.setdefault(k, v)  # CLHT-style: insert won't overwrite
+        elif kind == "update":
+            model[k] = v
+        elif kind == "delete":
+            model.pop(k, None)
+        states[k].add(model.get(k))
+    return states, model
+
+
+def plan_crash_sweep(
+    factory: Callable[[PMem], object],
+    ops: Sequence[Op],
+    *,
+    max_points: Optional[int] = 6,
+    mode: str = "powerfail",
+    seed: int = 0,
+) -> CrashReport:
+    """Crash a *batched plan* at every outermost group-commit boundary.
+
+    Complements :func:`run_crash_sweep` (which crashes inside scalar
+    ops): here the unit of failure atomicity is the persist epoch the
+    wave executor opens per shard run, so we dry-run the plan once with
+    :func:`group_commit_boundaries`, then re-run from a restored image
+    with a crash armed at (and one store past) each boundary.  After
+    powerfail + recover, every key must hold a legal plan-prefix state
+    (:func:`plan_prefix_states`), invariants must hold, and new writes
+    must succeed; a final clean run must reproduce the model exactly.
+    ``max_points`` caps the armed offsets, sampling evenly across the
+    plan; ``None`` sweeps every boundary.
+    """
+    from .plan import Plan
+
+    pmem = PMem(seed=seed)
+    index = factory(pmem)
+    report = CrashReport(index_name=type(index).__name__)
+    plan = Plan.from_ops(ops)
+    snap = PMSnapshot(pmem, index)
+    boundaries = group_commit_boundaries(
+        pmem, lambda: index.execute(plan, collect_results=False))
+    if not boundaries:
+        report.stall_failures.append("plan opened no persist epochs")
+        return report
+    states, model = plan_prefix_states(ops)
+    offsets = sorted({b + d for b in boundaries for d in (0, 1)})
+    if max_points is not None and len(offsets) > max_points:
+        offsets = offsets[:: len(offsets) // max_points + 1]
+    fresh = max(states) + 1
+    report.n_ops_tested = len(ops)
+    for off in offsets:
+        snap.restore(pmem)
+        report.n_crash_states += 1
+        tag = f"plan@store{off}"
+        pmem.arm_crash(after_stores=off)
+        try:
+            index.execute(plan, collect_results=False)
+            pmem.disarm_crash()
+        except CrashPoint:
+            pass
+        except Exception as e:  # pragma: no cover - failure path
+            report.stall_failures.append(f"{tag}: raised {e!r}")
+            continue
+        pmem.crash(mode=mode)
+        try:
+            index.recover()
+        except Exception as e:  # pragma: no cover - failure path
+            report.stall_failures.append(f"{tag}: recover raised {e!r}")
+            continue
+        for k, legal in states.items():
+            got = index.lookup(k)
+            if got not in legal:
+                report.consistency_failures.append(
+                    f"{tag}: key {k} reads {got!r}, not a plan-prefix state")
+                break
+        try:
+            index.check_invariants()
+        except AssertionError as e:  # pragma: no cover - failure path
+            report.consistency_failures.append(f"{tag}: invariant: {e}")
+        if not index.insert(fresh, 123) or index.lookup(fresh) != 123:
+            report.consistency_failures.append(
+                f"{tag}: post-crash write of {fresh} lost")
+    snap.restore(pmem)
+    index.execute(plan, collect_results=False)
+    if dict(index.items()) != model:
+        report.consistency_failures.append(
+            "clean plan run diverged from the dict model")
+    return report
 
 
 def audit_durability(factory: Callable[[PMem], object],

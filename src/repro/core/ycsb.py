@@ -45,6 +45,10 @@ class Workload:
     load_ops: List[Op]  # the Load A phase that populates the index
     run_ops: List[Op]  # the measured phase
     scan_lengths: List[int]
+    # generator knobs (distribution, theta, keyspace, ...) — filled by
+    # the adversarial matrix generator (repro.data.workloads) so
+    # benchmark rows can label themselves from the workload alone
+    meta: dict = dataclasses.field(default_factory=dict)
 
 
 def value_of(key: int) -> int:
@@ -107,7 +111,10 @@ def generate(name: str, n_load: int, n_run: int, *, seed: int = 0,
 def string_keyspace(keys: Sequence[int]) -> List[int]:
     """Derive 'string-like' keys: 24-byte YCSB strings stress longer
     traversals; we model them as keys whose entropy is spread across all
-    8 key bytes (tries walk more levels, B+ trees compare more)."""
+    8 key bytes (tries walk more levels, B+ trees compare more).  For
+    TRUE variable-length string keys (order-preserving encode/decode,
+    shared-prefix clustering) use ``repro.data.workloads.encode_str`` /
+    ``string_keys`` — the adversarial matrix's string column."""
     out = []
     for k in keys:
         z = (int(k) * 0x9E3779B97F4A7C15) & ((1 << 64) - 1)

@@ -164,7 +164,7 @@ class ShardedIndex:
         t0 = time.perf_counter_ns()
         shards = self.route(keys)
         parts = split_by_shard(kinds, shards, self.n_shards,
-                               scan_suffix=self.scheme == "prefix")
+                               scan_suffix=self.scheme.startswith("prefix"))
         result.route_ns = time.perf_counter_ns() - t0
         use_mesh = self.mesh_reads if mesh is None else mesh
         if use_mesh and n >= self.n_shards and bool((kinds == GET).all()):
@@ -251,7 +251,7 @@ class ShardedIndex:
                     slots[p] = r.results[local]
         for p, rows in scan_rows.items():
             count = int(aux[p])
-            if self.scheme == "prefix":
+            if self.scheme.startswith("prefix"):
                 # shards are ascending contiguous key ranges: ascending
                 # concatenation of per-shard rows is globally sorted
                 merged: list = []

@@ -75,9 +75,15 @@ class ClientStream:
 class StreamDriver:
     """Tick-driven multi-stream execution with conflict admission."""
 
+    #: driver stats mirrored into an attached MetricsRegistry, as
+    #: ``stream_<name>`` counters (``Session.stats``/``Server.stats``)
+    MIRRORED = ("ticks", "admitted_plans", "deferred_plans", "merged_ops",
+                "multi_stream_ticks")
+
     def __init__(self, index, n_streams: int, *,
                  collect_results: bool = True,
-                 lat_hist: Optional[Histogram] = None):
+                 lat_hist: Optional[Histogram] = None,
+                 metrics=None):
         self.index = index
         self.streams = [ClientStream(self, i) for i in range(n_streams)]
         self.collect_results = collect_results
@@ -86,6 +92,19 @@ class StreamDriver:
                       "merged_ops": 0, "multi_stream_ticks": 0,
                       "wall_ns": 0, "critical_ns": 0,
                       "found": 0, "acked": 0, "scanned": 0}
+        # optional obs.MetricsRegistry: admission telemetry (above all
+        # the deferred-plan contention counter) mirrored live so it is
+        # readable through the owning Session/Server stats view without
+        # a handle on the driver object
+        self.metrics = metrics
+        if metrics is not None:
+            for name in self.MIRRORED:
+                metrics.counter(f"stream_{name}")
+
+    def _mirror(self, name: str, delta: int = 1) -> None:
+        self.stats[name] += delta
+        if self.metrics is not None:
+            self.metrics.counter(f"stream_{name}").inc(delta)
 
     def pending(self) -> int:
         return sum(len(s.queue) for s in self.streams)
@@ -114,7 +133,7 @@ class StreamDriver:
                                     np.concatenate(adm_keys),
                                     writes_conflict=True)
                 if bool(conf.any()):
-                    self.stats["deferred_plans"] += 1
+                    self._mirror("deferred_plans")
                     continue
             stream.queue.popleft()
             admitted.append((stream, ticket))
@@ -123,14 +142,14 @@ class StreamDriver:
             adm_aux.append(aux)
         if not admitted:
             return None
-        self.stats["ticks"] += 1
-        self.stats["admitted_plans"] += len(admitted)
-        self.stats["multi_stream_ticks"] += len(admitted) > 1
+        self._mirror("ticks")
+        self._mirror("admitted_plans", len(admitted))
+        self._mirror("multi_stream_ticks", int(len(admitted) > 1))
         merged = Plan.from_arrays(np.concatenate(adm_kinds),
                                   np.concatenate(adm_keys),
                                   np.concatenate(adm_aux))
         n_ops = len(merged)
-        self.stats["merged_ops"] += n_ops
+        self._mirror("merged_ops", n_ops)
         t0 = time.perf_counter_ns()
         with _OBS.span("streams.tick", streams=len(admitted), ops=n_ops):
             res = self.index.execute(

@@ -77,8 +77,22 @@ def _route_kernel(klo_ref, khi_ref, out_ref, *, bits: int, scheme: str):
     if scheme == "hash":
         _, mhi = _mix64_halves(lo, hi)
         shard = mhi >> jnp.uint32(32 - bits)
-    else:  # prefix: keys are 63-bit, route on bits [62, 63-bits)
-        shard = (hi >> jnp.uint32(31 - bits)) & jnp.uint32((1 << bits) - 1)
+    else:
+        # prefix(@msb): route on key bits [msb, msb+1-bits).  msb=62
+        # (plain 63-bit words) keeps the extraction in the high half;
+        # narrower keyspaces (prefix@58: encoded string keys) may pull
+        # it into the low half or straddle the halves.
+        from .ref import prefix_msb
+        s = prefix_msb(scheme) + 1 - bits
+        assert s >= 0, (scheme, bits)
+        mask = jnp.uint32((1 << bits) - 1)
+        if s >= 32:  # fully in the high half
+            shard = (hi >> jnp.uint32(s - 32)) & mask
+        elif s + bits <= 32:  # fully in the low half
+            shard = (lo >> jnp.uint32(s)) & mask
+        else:  # straddles the halves (s in [2, 32) here since bits < 32)
+            shard = ((hi << jnp.uint32(32 - s))
+                     | (lo >> jnp.uint32(s))) & mask
     out_ref[...] = shard.astype(jnp.int32)
 
 
@@ -88,8 +102,9 @@ def _route_kernel(klo_ref, khi_ref, out_ref, *, bits: int, scheme: str):
 def shard_route(klo, khi, *, bits: int, scheme: str = "hash",
                 query_block: int = SHARD_BLOCK, interpret: bool = True):
     """klo/khi: [Q] int32 key halves; returns [Q] int32 shard ids in
-    [0, 2^bits).  ``scheme`` is 'hash' (splitmix64 top bits) or
-    'prefix' (key top bits)."""
+    [0, 2^bits).  ``scheme`` is 'hash' (splitmix64 top bits),
+    'prefix' (key top bits), or 'prefix@<m>' (bits [m, m+1-bits) —
+    narrow keyspaces such as encoded string keys)."""
     assert 0 <= bits <= 31
     Q = klo.shape[0]
     qb = min(query_block, Q)

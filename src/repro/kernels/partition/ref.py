@@ -10,7 +10,13 @@ shard count:
 * ``prefix`` — top bits of the key itself (keys are PM words in
   ``[0, 2^63)``, so bit 62 downward).  Shards are contiguous key
   ranges, which for tries/B+ trees means a shard's writes touch one
-  subtree family.  Used by the ordered indexes.
+  subtree family.  Used by the ordered indexes.  ``prefix@<m>``
+  routes on bit ``m`` downward instead, for keyspaces that occupy a
+  narrower range: encoded string keys (``repro.data.workloads``) live
+  in bits [58..3], so plain ``prefix`` would put every one of them in
+  shard 0 — ``prefix@58`` range-shards them while preserving the
+  order-contiguity the scan merge relies on (exact for keys below
+  ``2^(m+1)``; larger keys alias back into the shard range).
 
 The kernel in ``kernel.py`` reproduces these routes on 32-bit lanes
 (16-bit-limb 64-bit arithmetic); this module is the ground truth it is
@@ -24,6 +30,17 @@ from __future__ import annotations
 import numpy as np
 
 _U64 = np.uint64
+
+
+def prefix_msb(scheme: str) -> int:
+    """The highest routed bit of a prefix scheme: 62 for ``prefix``
+    (63-bit PM words), ``m`` for ``prefix@<m>``."""
+    if scheme == "prefix":
+        return 62
+    msb = int(scheme.split("@", 1)[1])
+    if not 0 < msb <= 62:
+        raise ValueError(f"prefix msb out of range in {scheme!r}")
+    return msb
 
 
 def mix64_ref(keys: np.ndarray) -> np.ndarray:
@@ -45,9 +62,12 @@ def route_ref(keys: np.ndarray, n_shards: int,
     b = n_shards.bit_length() - 1
     if scheme == "hash":
         return (mix64_ref(keys) >> _U64(64 - b)).astype(np.int32)
-    if scheme == "prefix":
-        # keys are non-negative 63-bit words: route on bits [62, 63-b)
-        return ((keys >> np.int64(63 - b)) & np.int64(n_shards - 1)
+    if scheme.startswith("prefix"):
+        # route on bits [msb, msb+1-b): msb=62 for plain 63-bit words,
+        # caller-chosen for narrower keyspaces (prefix@58: string keys)
+        msb = prefix_msb(scheme)
+        assert msb + 1 - b >= 0, (scheme, n_shards)
+        return ((keys >> np.int64(msb + 1 - b)) & np.int64(n_shards - 1)
                 ).astype(np.int32)
     raise ValueError(f"unknown shard scheme {scheme!r}")
 

@@ -338,6 +338,18 @@ class Server:
         self.metrics.gauge("sessions_connected").set(self._next_sid - 1)
         return ServerSession(self, sid)
 
+    def streams(self, n: int, *, collect_results: bool = True,
+                lat_hist=None):
+        """Multi-stream plan driver over the server's PM prefix index
+        (``kv.prefix``), mirroring admission telemetry — above all the
+        ``stream_deferred_plans`` contention counter — into
+        ``Server.stats``.  The plan-level dual of ``connect()``:
+        sessions race token requests, streams race raw index plans."""
+        from ..distributed import StreamDriver
+        return StreamDriver(self.kv.prefix, n,
+                            collect_results=collect_results,
+                            lat_hist=lat_hist, metrics=self.metrics)
+
     def submit(self, prompt: List[int], max_new: int = 16, *,
                sid: int = 0) -> int:
         rid = self._next_rid

@@ -333,3 +333,54 @@ def test_server_recovery_time_to_first_served():
     assert server.stats["warm_prefixes_restored"] == 1
     server._first_service()  # idempotent once closed
     assert len(obs.spans("recovery.time_to_first_served")) == 1
+
+
+# ---------------------------------------------------------------------------
+# stream-driver admission telemetry mirrored into Session/Server stats
+# ---------------------------------------------------------------------------
+
+
+def _conflicting_plans(n_plans=6):
+    """Write plans that all hit the same keys — at most one can be
+    admitted per tick, so every multi-stream tick defers the rest."""
+    return [Plan.from_ops([("update", k, 100 + i) for k in (5, 6, 7)])
+            for i in range(n_plans)]
+
+
+def test_session_stats_mirror_stream_deferrals_exactly():
+    from repro.api import Session
+    sess = Session(PCLHT(PMem(), n_buckets=16), kind="clht")
+    for k in (5, 6, 7):
+        sess.put(k, k)
+    drv = sess.streams(2, collect_results=False)
+    for i, plan in enumerate(_conflicting_plans()):
+        drv.streams[i % 2].submit(plan)
+    drv.run()
+    assert drv.stats["deferred_plans"] > 0
+    # exact attribution: the registry view must equal the driver's own
+    # counters, name for name, with no double counting
+    for name in drv.MIRRORED:
+        assert sess.stats[f"stream_{name}"] == drv.stats[name], name
+    # a second driver on the same session accumulates into the same
+    # counters (registry holds the session-lifetime totals)
+    before = sess.stats["stream_deferred_plans"]
+    drv2 = sess.streams(2, collect_results=False)
+    for i, plan in enumerate(_conflicting_plans()):
+        drv2.streams[i % 2].submit(plan)
+    drv2.run()
+    assert drv2.stats["deferred_plans"] > 0
+    assert (sess.stats["stream_deferred_plans"]
+            == before + drv2.stats["deferred_plans"])
+
+
+def test_server_stats_mirror_stream_deferrals_exactly():
+    server = _make_server()
+    for k in (5, 6, 7):
+        server.kv.prefix.insert(k, k)  # P-ART: keys/values must be != 0
+    drv = server.streams(2, collect_results=False)
+    for i, plan in enumerate(_conflicting_plans()):
+        drv.streams[i % 2].submit(plan)
+    drv.run()
+    assert drv.stats["deferred_plans"] > 0
+    for name in drv.MIRRORED:
+        assert server.stats[f"stream_{name}"] == drv.stats[name], name

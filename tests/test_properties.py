@@ -138,6 +138,64 @@ def test_art_header_word_roundtrip(plen, prefix):
     assert n == plen and p == tuple(prefix)[:plen]
 
 
+# ---------------------------------------------------------------------------
+# randomized group-commit crash-point sweep (the adversarial matrix's
+# durability leg): crash at every persist-epoch boundary of a random
+# mixed plan, on every plan-surface index
+# ---------------------------------------------------------------------------
+
+from repro.core import PBwTree, plan_crash_sweep
+from repro.core.baselines import CCEH, FastFair
+
+CRASH_FACTORIES = [
+    ("P-CLHT", lambda p: PCLHT(p, n_buckets=8)),
+    ("P-ART", PART),
+    ("P-HOT", PHOT),
+    ("P-Masstree", PMasstree),
+    ("P-BwTree", PBwTree),
+    ("CCEH", lambda p: CCEH(p, depth=2, fixed=True)),
+    ("FAST&FAIR", lambda p: FastFair(p, fixed=True)),
+]
+
+
+@st.composite
+def mixed_op_sequences(draw):
+    """Insert/update/delete/lookup streams over a small unique keyspace
+    (every key's per-op state history is tracked by the oracle)."""
+    n = draw(st.integers(2, 12))
+    keys = draw(st.lists(KEYS, min_size=n, max_size=n, unique=True))
+    ops = []
+    for i, k in enumerate(keys):
+        ops.append(("insert", k, (k % 1000003) + 1))
+        if draw(st.booleans()):
+            ops.append(("update", k, (k % 999983) + 7))
+        if draw(st.booleans()):
+            victim = keys[draw(st.integers(0, i))]
+            ops.append(("delete", victim, 0))
+        if draw(st.booleans()):
+            ops.append(("lookup", keys[draw(st.integers(0, i))], 0))
+    return ops
+
+
+@pytest.mark.parametrize("name,factory", CRASH_FACTORIES,
+                         ids=[n for n, _ in CRASH_FACTORIES])
+@settings(max_examples=5, deadline=None)
+@given(mixed_op_sequences())
+def test_crash_at_every_group_commit_point(name, factory, ops):
+    """Randomized group-commit crash-point sweep on every plan-surface
+    index: crash at (and one store past) each outermost persist-epoch
+    boundary of a random mixed plan; after powerfail + recover every
+    key must hold a legal plan-prefix state, invariants must hold, new
+    writes must succeed, and a clean run must match the dict model.
+    (The deterministic twin lives in test_workloads.py so the sweep
+    still executes where hypothesis is unavailable.)"""
+    report = plan_crash_sweep(factory, ops, max_points=6)
+    assert report.n_crash_states > 0
+    assert report.ok, f"{name}: {report.summary()}\n" + "\n".join(
+        report.consistency_failures + report.durability_failures
+        + report.stall_failures)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(1, 500), min_size=1, max_size=60))
 def test_arena_allocations_never_overlap(sizes):

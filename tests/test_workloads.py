@@ -1,0 +1,286 @@
+"""Adversarial workload generators (``repro.data.workloads``): the
+Zipfian and hot-set samplers must be bit-exact against independent
+scalar oracles consuming the same RNG stream, string-key encoding must
+round-trip and preserve lexicographic order, schedules must be
+deterministic under a fixed seed, and every matrix mix must replay to
+the same found/acked/scanned counts on every plan-surface index as the
+sequential dict/sorted-dict oracle."""
+
+import bisect
+
+import numpy as np
+import pytest
+
+from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem
+from repro.core.baselines import CCEH, FastFair
+from repro.core.ycsb import run_workload
+from repro.data.workloads import (MAX_STR_LEN, decode_str, encode_str,
+                                  hotset_ranks, matrix_workload, replay,
+                                  string_keys, zipf_cdf, zipf_ranks,
+                                  zipf_weights)
+
+ORDERED_FACTORIES = [
+    ("FAST&FAIR", lambda p: FastFair(p, fixed=True)),
+    ("P-BwTree", PBwTree),
+    ("P-Masstree", PMasstree),
+    ("P-ART", PART),
+    ("P-HOT", PHOT),
+]
+UNORDERED_FACTORIES = [
+    ("CCEH", lambda p: CCEH(p, depth=2, fixed=True)),
+    ("P-CLHT", lambda p: PCLHT(p, n_buckets=64)),
+]
+ALL_FACTORIES = ORDERED_FACTORIES + UNORDERED_FACTORIES
+
+
+# ---------------------------------------------------------------------------
+# Zipfian sampler vs an independent scalar oracle
+# ---------------------------------------------------------------------------
+
+
+def _zipf_oracle(n_items, theta, size, seed):
+    """Independent scalar re-derivation: per-rank float64 powers, a
+    scalar left-to-right partial-sum loop (``np.cumsum`` accumulates
+    sequentially, so this reproduces its array bit-exactly), and a
+    per-draw bisect over the partial sums."""
+    weights = [np.float64(r) ** np.float64(-theta)
+               for r in range(1, n_items + 1)]
+    cdf = []
+    acc = np.float64(0.0)
+    for w in weights:
+        acc = acc + w
+        cdf.append(acc)
+    rng = np.random.default_rng(seed)
+    u = rng.random(size)  # the same single stream draw the sampler makes
+    out = []
+    for ui in u:
+        x = np.float64(ui) * cdf[-1]
+        r = bisect.bisect_right(cdf, x)
+        out.append(min(r, n_items - 1))
+    return np.asarray(out, np.int64), cdf, u
+
+
+@pytest.mark.parametrize("theta", [0.0, 0.6, 0.9, 1.2])
+def test_zipf_bit_exact_vs_scalar_oracle(theta):
+    n_items, size, seed = 257, 4096, 3
+    got = zipf_ranks(n_items, theta, size, np.random.default_rng(seed))
+    want, cdf, u = _zipf_oracle(n_items, theta, size, seed)
+    assert np.array_equal(got, want), \
+        f"sampler diverged from scalar oracle at theta={theta}"
+    # the vectorized cdf must equal the scalar partial sums bit-for-bit
+    assert np.array_equal(zipf_cdf(n_items, theta), np.asarray(cdf))
+    # bracket (rejection) check: rank r is legal iff cdf[r-1] <= u*cdf[-1] < cdf[r]
+    for ui, r in zip(u[:512], got[:512]):
+        x = np.float64(ui) * cdf[-1]
+        assert (r == 0 or cdf[r - 1] <= x) and \
+            (x < cdf[r] or r == n_items - 1), \
+            f"rank {r} outside its CDF bracket for u={ui!r}"
+
+
+def test_zipf_skew_shape():
+    # theta=0 is uniform in law; higher theta concentrates rank 0
+    rng = np.random.default_rng(0)
+    flat = zipf_ranks(100, 0.0, 20000, rng)
+    rng = np.random.default_rng(0)
+    skew = zipf_ranks(100, 1.2, 20000, rng)
+    assert np.mean(flat == 0) < 0.03 < np.mean(skew == 0)
+    w = zipf_weights(5, 1.0)
+    assert np.allclose(w, [1, 1 / 2, 1 / 3, 1 / 4, 1 / 5])
+
+
+# ---------------------------------------------------------------------------
+# hot-set sampler vs scalar recombination of the same stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hot_frac,hot_op_frac",
+                         [(0.01, 0.9), (0.1, 0.5), (1.0, 0.9)])
+def test_hotset_bit_exact_vs_scalar_oracle(hot_frac, hot_op_frac):
+    n_items, size, seed = 400, 4096, 5
+    got = hotset_ranks(n_items, hot_frac, hot_op_frac, size,
+                       np.random.default_rng(seed))
+    # oracle: consume the identical three vectorized draws, recombine
+    # scalar-wise
+    rng = np.random.default_rng(seed)
+    n_hot = max(1, int(round(n_items * hot_frac)))
+    n_cold = max(n_items - n_hot, 1)
+    coin = rng.random(size)
+    hot = rng.integers(0, n_hot, size=size)
+    cold = rng.integers(0, n_cold, size=size)
+    for i in range(size):
+        if n_hot >= n_items:
+            want = hot[i]
+        elif coin[i] < hot_op_frac:
+            want = hot[i]
+        else:
+            want = n_hot + cold[i]
+        assert got[i] == want, f"draw {i} diverged"
+    if n_hot < n_items:
+        hot_share = np.mean(got < n_hot)
+        assert abs(hot_share - hot_op_frac) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# string keys
+# ---------------------------------------------------------------------------
+
+
+def test_encode_decode_round_trip():
+    rng = np.random.default_rng(9)
+    for _ in range(500):
+        n = int(rng.integers(1, MAX_STR_LEN + 1))
+        b = bytes(rng.integers(1, 256, size=n, dtype=np.uint8))
+        k = encode_str(b)
+        assert 0 < k < (1 << 59)
+        assert decode_str(k) == b
+    assert decode_str(encode_str("abc")) == b"abc"
+
+
+def test_encode_preserves_lexicographic_order():
+    rng = np.random.default_rng(10)
+    pool = [bytes(rng.integers(1, 256,
+                               size=int(rng.integers(1, MAX_STR_LEN + 1)),
+                               dtype=np.uint8))
+            for _ in range(300)]
+    # include adversarial prefix pairs: a proper prefix must sort
+    # immediately before its extensions
+    pool += [b"a", b"ab", b"abc", b"ab\x01", b"ac", b"b"]
+    enc = sorted(set(pool))
+    assert enc == sorted(set(pool), key=encode_str)
+
+
+def test_encode_rejects_bad_keys():
+    with pytest.raises(ValueError):
+        encode_str("")
+    with pytest.raises(ValueError):
+        encode_str(b"x" * (MAX_STR_LEN + 1))
+    with pytest.raises(ValueError):
+        encode_str(b"a\x00b")
+    with pytest.raises(ValueError):
+        decode_str(1 << 60)  # out of the encoded range
+    with pytest.raises(ValueError):
+        decode_str(0)
+
+
+def test_string_keys_clustered_and_unique():
+    keys = string_keys(500, n_prefixes=8, prefix_len=3, seed=4)
+    assert len(keys) == len(set(keys)) == 500
+    decoded = [decode_str(k) for k in keys]
+    assert all(len(d) == MAX_STR_LEN for d in decoded)
+    prefixes = {d[:3] for d in decoded}
+    assert len(prefixes) <= 8  # the shared-prefix pool
+    assert string_keys(500, n_prefixes=8, prefix_len=3, seed=4) == keys
+
+
+# ---------------------------------------------------------------------------
+# schedules: determinism + replay equivalence on every index
+# ---------------------------------------------------------------------------
+
+
+def test_matrix_workload_deterministic():
+    a = matrix_workload("F", 200, 200, dist="zipfian", theta=0.9, seed=3)
+    b = matrix_workload("F", 200, 200, dist="zipfian", theta=0.9, seed=3)
+    c = matrix_workload("F", 200, 200, dist="zipfian", theta=0.9, seed=4)
+    assert a.load_ops == b.load_ops and a.run_ops == b.run_ops
+    assert a.run_ops != c.run_ops
+    assert a.meta["theta"] == 0.9 and a.meta["dist"] == "zipfian"
+
+
+def test_matrix_workload_rejects_unknown_knobs():
+    with pytest.raises(ValueError):
+        matrix_workload("A", 10, 10, dist="pareto")
+    with pytest.raises(ValueError):
+        matrix_workload("A", 10, 10, keyspace="tuple")
+
+
+MIXES = [
+    dict(mix="F", dist="zipfian", theta=1.2),
+    dict(mix="A", dist="hotset", hot_frac=0.02, hot_op_frac=0.9),
+    dict(mix="D", dist="zipfian", theta=0.9),
+]
+SCAN_MIXES = [
+    dict(mix="E", dist="zipfian", theta=0.9),
+    dict(mix="E", dist="zipfian", theta=0.9, keyspace="string"),
+]
+
+
+@pytest.mark.parametrize("name,factory", ALL_FACTORIES,
+                         ids=[n for n, _ in ALL_FACTORIES])
+def test_matrix_mix_replays_exactly(name, factory):
+    """Every matrix mix, batched plan path, must produce the replay
+    oracle's found/acked/scanned counts on every plan-surface index —
+    the ordered indexes additionally on the scan-heavy and string-key
+    schedules."""
+    mixes = MIXES + [dict(mix="A", dist="zipfian", theta=0.9,
+                          keyspace="string")]
+    ordered = any(name == n for n, _ in ORDERED_FACTORIES)
+    if ordered:
+        mixes = mixes + SCAN_MIXES
+    for knobs in mixes:
+        wl = matrix_workload(n_load=250, n_run=250, seed=13, **knobs)
+        idx = factory(PMem())
+        run_workload(idx, wl, phase="load", batch_lookups=True)
+        done = run_workload(idx, wl, phase="run", batch_lookups=True,
+                            max_batch=64)
+        want = replay(wl.load_ops, wl.run_ops)
+        got = (done["found"], done["acked"], done["scanned"])
+        assert got == want.counts(), \
+            f"{name} diverged from replay oracle on {knobs}"
+        # the surviving key/value state must match the oracle's model
+        assert dict(idx.items()) == want.model, \
+            f"{name} final state diverged from replay model on {knobs}"
+
+
+# ---------------------------------------------------------------------------
+# deterministic group-commit crash-point sweep (hypothesis-free twin of
+# test_properties.py::test_crash_at_every_group_commit_point)
+# ---------------------------------------------------------------------------
+
+
+def _seeded_mixed_ops(seed, n_keys=10):
+    """Random mixed insert/update/delete/lookup sequence from a fixed
+    seed — same shape as the hypothesis strategy, but runnable where
+    hypothesis is not installed."""
+    rng = np.random.default_rng(seed)
+    keys = [int(k) for k in
+            rng.choice(1 << 30, size=n_keys, replace=False) + 1]
+    ops = []
+    for i, k in enumerate(keys):
+        ops.append(("insert", k, (k % 1000003) + 1))
+        if rng.random() < 0.5:
+            ops.append(("update", k, (k % 999983) + 7))
+        if rng.random() < 0.3:
+            ops.append(("delete", keys[int(rng.integers(0, i + 1))], 0))
+        if rng.random() < 0.3:
+            ops.append(("lookup", keys[int(rng.integers(0, i + 1))], 0))
+    return ops
+
+
+@pytest.mark.parametrize("name,factory", ALL_FACTORIES,
+                         ids=[n for n, _ in ALL_FACTORIES])
+def test_plan_crash_sweep_every_index(name, factory):
+    """Crash a batched mixed plan at every sampled outermost
+    group-commit boundary: recovery must land every key on a legal
+    plan-prefix state, invariants must hold, new writes must succeed,
+    and a clean run must reproduce the dict model (all checked inside
+    plan_crash_sweep)."""
+    from repro.core import plan_crash_sweep
+    report = plan_crash_sweep(factory, _seeded_mixed_ops(seed=21),
+                              max_points=6)
+    assert report.n_crash_states > 0
+    assert report.ok, f"{name}: {report.summary()}\n" + "\n".join(
+        report.consistency_failures + report.durability_failures
+        + report.stall_failures)
+
+
+def test_replay_oracle_semantics():
+    load = [("insert", 5, 50), ("insert", 7, 70)]
+    run = [("lookup", 5, 0), ("lookup", 6, 0),     # found: 1
+           ("insert", 5, 99),                       # dup -> not acked
+           ("insert", 8, 80),                       # acked
+           ("update", 9, 90),                       # upsert -> acked
+           ("delete", 7, 0), ("delete", 7, 0),      # acked once
+           ("scan", 5, 10)]                         # 5, 8, 9 -> 3
+    res = replay(load, run)
+    assert res.counts() == (1, 3, 3)  # acked: insert 8, update 9, delete 7
+    assert res.model == {5: 50, 8: 80, 9: 90}

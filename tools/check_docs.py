@@ -14,7 +14,9 @@ Fails (exit 1) when:
   or docs/API.md is missing;
 * docs/API.md stops documenting the public plan surface (the
   ``execute``/``Plan``/``Session``/``pipeline`` anchor terms) or
-  loses the migration table from the pre-plan ``*_batch`` calls.
+  loses the migration table from the pre-plan ``*_batch`` calls;
+* docs/WORKLOADS.md stops documenting the adversarial-matrix surface
+  (samplers, string-key encoding, deferral metric, crash sweep).
 """
 
 from __future__ import annotations
@@ -29,7 +31,8 @@ README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition",
                    "conflict")
 TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
                      "docs/PMEM_MODEL.md", "docs/API.md",
-                     "docs/OBSERVABILITY.md", "docs/SHARDING.md")
+                     "docs/OBSERVABILITY.md", "docs/SHARDING.md",
+                     "docs/WORKLOADS.md")
 # the public-surface anchors docs/API.md must keep documenting
 API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
                    "open_index", "lookup_batch", "scan_batch",
@@ -43,6 +46,11 @@ SHARDING_DOC_ANCHORS = ("ShardedIndex", "split_by_shard", "StreamDriver",
                         "crash_shard", "recover_shard", "mesh_lookup",
                         "shard.plan", "Reporting model", "critical_ns",
                         "--shards")
+# the adversarial-matrix surface docs/WORKLOADS.md must keep documenting
+WORKLOADS_DOC_ANCHORS = ("zipf_ranks", "hotset_ranks", "encode_str",
+                         "string_keys", "matrix_workload", "replay",
+                         "deferred_plans", "prefix@55", "clwb_per_op",
+                         "plan_crash_sweep", "--smoke")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -107,6 +115,13 @@ def main() -> int:
             if anchor not in shard_text:
                 errors.append(f"docs/SHARDING.md no longer documents "
                               f"{anchor!r} (scale-out-surface drift)")
+    wl_doc = ROOT / "docs" / "WORKLOADS.md"
+    if wl_doc.exists():
+        wl_text = wl_doc.read_text()
+        for anchor in WORKLOADS_DOC_ANCHORS:
+            if anchor not in wl_text:
+                errors.append(f"docs/WORKLOADS.md no longer documents "
+                              f"{anchor!r} (matrix-surface drift)")
     for path in files:
         errors.extend(check_file(path, kernel_pkgs))
     for e in errors:
