@@ -25,13 +25,14 @@ from typing import Callable, Dict, List, Tuple
 
 from repro.api.session import Session
 from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan
-from repro.core.baselines import CCEH, FastFair
+from repro.core.baselines import CCEH, FastFair, LevelHashing
 from repro.core.ycsb import run_workload
 from repro.data.workloads import matrix_workload, replay
 from repro.obs import Histogram
 
-# every plan-surface index: the five converted ordered indexes, the
-# two hand-crafted PM baselines (both ported to the batched surface)
+# every plan-surface index: the five converted ordered indexes and the
+# three hand-crafted PM baselines — all eight of the paper's
+# comparison ride the same batched surface
 ORDERED = {
     "FAST&FAIR": lambda p: FastFair(p, fixed=True),
     "P-BwTree": PBwTree,
@@ -41,6 +42,7 @@ ORDERED = {
 }
 UNORDERED = {
     "CCEH": lambda p: CCEH(p, depth=4, fixed=True),
+    "LevelHashing": lambda p: LevelHashing(p, n_top=256),
     "P-CLHT": lambda p: PCLHT(p, n_buckets=512),
 }
 TARGETS = {**ORDERED, **UNORDERED}
@@ -67,11 +69,13 @@ def _timed_run(factory: Callable, wl, *, tag: str,
     run_workload(idx, wl, phase="load", batch_lookups=True)
     hist = Histogram(wl.name)
     c0 = pmem.counters.snapshot()
+    p0 = dict(idx.probe_stats)
     t0 = time.perf_counter()
     done = run_workload(idx, wl, phase="run", batch_lookups=True,
                         max_batch=max_batch, lat_hist=hist)
     dt = time.perf_counter() - t0
     d = pmem.counters.delta(c0)
+    ps = {k: v - p0.get(k, 0) for k, v in idx.probe_stats.items()}
     _assert_oracle(wl, done["found"], done["acked"], done["scanned"],
                    "matrix run")
     n_ops = max(len(wl.run_ops), 1)
@@ -81,6 +85,12 @@ def _timed_run(factory: Callable, wl, *, tag: str,
         f"{tag}_fence_per_op": d.fence / n_ops,
         f"{tag}_lat_p50_us": hist.percentile(50) / 1e3,
         f"{tag}_lat_p99_us": hist.percentile(99) / 1e3,
+        # fingerprint probe-lane columns: modeled PM gather words per
+        # op and the filter's false-positive share of its candidates
+        f"{tag}_pm_load_per_op": ps["pm_load_words"] / n_ops,
+        f"{tag}_fp_false_frac": (
+            ps["fp_false_positives"] / ps["candidates"]
+            if ps["candidates"] else 0.0),
     }
 
 

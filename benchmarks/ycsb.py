@@ -335,6 +335,173 @@ def _chunk_plans(ops, chunk: int):
             for i in range(0, len(ops), chunk)]
 
 
+# fingerprint probe-lane A/B: one target per probe family — bucket
+# windows (P-CLHT), radix descent (P-ART), segment probe (CCEH), and
+# the sorted-run path (LevelHashing)
+FP_TARGETS = {
+    "P-CLHT": lambda p: PCLHT(p, n_buckets=512),
+    "P-ART": PART,
+    "CCEH": lambda p: CCEH(p, depth=4, fixed=True),
+    "LevelHashing": lambda p: LevelHashing(p, n_top=256),
+}
+
+
+def bench_fingerprints(n_load: int, n_run: int, workloads=("C", "B")):
+    """Fingerprint probe-lane A/B on the read-dominant mixes: identical
+    op streams drive a fingerprinted and an unfingerprinted twin of
+    each index, results are asserted identical, and the rows carry the
+    modeled PM probe traffic (``pm_load_words`` — fp-lane words plus
+    full-key gathers) and the filter outcome columns next to the wall
+    clock.  On YCSB-C the fingerprinted twin MUST gather fewer PM
+    words — that reduction is the tentpole claim, asserted here, not
+    just reported.
+
+    A one-byte filter only earns its keep where probe lanes hold keys
+    that are NOT the query: multi-lane bucket windows (P-CLHT scans a
+    whole bucket per lookup) and negative lookups (the lane rejects
+    the candidate before its two key/value words are gathered).  The
+    all-hit C/B mixes are therefore the honesty columns — on the
+    1-entry sorted-run windows (CCEH/LevelHashing) and true-leaf radix
+    descents (P-ART) they show the filter's overhead, and the hard
+    reduction assert applies only to P-CLHT.  The ``neg_*`` columns
+    probe near-miss keys (bit-flipped live keys, so radix descents
+    still reach a candidate leaf) and there the reduction is asserted
+    for every target."""
+    bucket_family = {"P-CLHT"}
+    rows = []
+    sig = ("found", "acked", "insert", "update", "delete", "lookup")
+    print(f"# fingerprint probe lanes — fp-on vs fp-off read plans "
+          f"({2 * n_run} run ops)")
+    for name, factory in FP_TARGETS.items():
+        out: Dict[str, float] = {}
+        for wl_name in workloads:
+            wl = generate(wl_name, n_load, 2 * n_run, seed=7)
+            n_ops = len(wl.run_ops)
+            runs = {}
+            twins = {}
+            for fp in (True, False):
+                idx = factory(PMem())
+                idx.fingerprints = fp
+                run_workload(idx, wl, phase="load", batch_lookups=True)
+                run_workload(idx, wl, phase="run", batch_lookups=True)
+                p0 = dict(idx.probe_stats)
+                t0 = time.perf_counter()
+                done = run_workload(idx, wl, phase="run",
+                                    batch_lookups=True)
+                dt = time.perf_counter() - t0
+                ps = {k: v - p0[k] for k, v in idx.probe_stats.items()}
+                runs[fp] = (done, ps, dt)
+                twins[fp] = idx
+            don, pon, ton = runs[True]
+            doff, poff, toff = runs[False]
+            assert all(don[k] == doff[k] for k in sig), \
+                f"{name}/{wl_name}: fingerprints changed op results"
+            assert pon["candidates"] == (pon["fp_hits"]
+                                         + pon["fp_false_positives"]), \
+                f"{name}/{wl_name}: filter attribution broke"
+            if wl_name == "C" and name in bucket_family:
+                assert pon["pm_load_words"] < poff["pm_load_words"], (
+                    f"{name}: fingerprints did not reduce PM probe "
+                    f"traffic on C ({pon['pm_load_words']} >= "
+                    f"{poff['pm_load_words']})")
+            out[f"{wl_name}_kops_fp"] = n_ops / ton / 1e3
+            out[f"{wl_name}_kops_nofp"] = n_ops / toff / 1e3
+            out[f"{wl_name}_pm_load_fp_per_op"] = (
+                pon["pm_load_words"] / n_ops)
+            out[f"{wl_name}_pm_load_nofp_per_op"] = (
+                poff["pm_load_words"] / n_ops)
+            out[f"{wl_name}_pm_load_reduction"] = (
+                poff["pm_load_words"] / max(pon["pm_load_words"], 1))
+            out[f"{wl_name}_candidates_fp_per_op"] = (
+                pon["candidates"] / n_ops)
+            out[f"{wl_name}_candidates_nofp_per_op"] = (
+                poff["candidates"] / n_ops)
+            out[f"{wl_name}_fp_false_frac"] = (
+                pon["fp_false_positives"] / max(pon["candidates"], 1))
+            if wl_name != "C":
+                continue
+            # negative-lookup pass on the same twins: near-miss keys
+            # (bit-flipped live keys) so radix descents still reach a
+            # candidate leaf — the filter's home turf, asserted for all
+            keyset = {k for _, k, _ in wl.load_ops}
+            neg = [k ^ 1 for _, k, _ in wl.load_ops
+                   if (k ^ 1) not in keyset][:n_ops]
+            negplan = Plan.from_ops([("lookup", k, 0) for k in neg])
+            nps = {}
+            for fp, idx in twins.items():
+                p0 = dict(idx.probe_stats)
+                res = idx.execute(negplan)
+                assert res.results == [None] * len(neg), \
+                    f"{name}: near-miss probe found a phantom key"
+                nps[fp] = {k: v - p0[k]
+                           for k, v in idx.probe_stats.items()}
+            assert nps[True]["pm_load_words"] < nps[False]["pm_load_words"], (
+                f"{name}: fingerprints did not reduce PM probe traffic "
+                f"on negative lookups ({nps[True]['pm_load_words']} >= "
+                f"{nps[False]['pm_load_words']})")
+            assert nps[True]["candidates"] < nps[False]["candidates"]
+            out["neg_pm_load_fp_per_op"] = (
+                nps[True]["pm_load_words"] / len(neg))
+            out["neg_pm_load_nofp_per_op"] = (
+                nps[False]["pm_load_words"] / len(neg))
+            out["neg_pm_load_reduction"] = (
+                nps[False]["pm_load_words"]
+                / max(nps[True]["pm_load_words"], 1))
+            out["neg_fp_false_frac"] = (
+                nps[True]["fp_false_positives"]
+                / max(nps[True]["candidates"], 1))
+        rows.append((f"ycsb_fingerprints/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"{w}: pm/op {out[f'{w}_pm_load_nofp_per_op']:6.2f} -> "
+            f"{out[f'{w}_pm_load_fp_per_op']:6.2f} "
+            f"({out[f'{w}_pm_load_reduction']:4.1f}x, false "
+            f"{out[f'{w}_fp_false_frac']:5.3f})" for w in workloads)
+            + f"  neg: pm/op {out['neg_pm_load_nofp_per_op']:6.2f} -> "
+              f"{out['neg_pm_load_fp_per_op']:6.2f} "
+              f"({out['neg_pm_load_reduction']:4.1f}x)")
+    return rows
+
+
+def fingerprint_smoke(n: int = 4000) -> dict:
+    """CI fingerprint smoke (``--smoke --fingerprints``): YCSB-C twins
+    with and without the fingerprint lane must return bit-identical
+    results (checked value-by-value against the workload oracle, not
+    just by found-count) while the fingerprinted twin gathers strictly
+    fewer modeled PM words and full-key candidates."""
+    wl = generate("C", n, n, seed=7)
+    probe_keys = [k for _, k, _ in wl.load_ops[:2000]]
+    gets = Plan.from_ops([("lookup", k, 0) for k in probe_keys])
+    oracle = [value_of(k) for k in probe_keys]
+    stats = {}
+    for fp in (True, False):
+        idx = PCLHT(PMem(), n_buckets=512)
+        idx.fingerprints = fp
+        run_workload(idx, wl, phase="load", batch_lookups=True)
+        done = run_workload(idx, wl, phase="run", batch_lookups=True)
+        res = idx.execute(gets)
+        assert res.results == oracle, \
+            f"fingerprints={fp}: lookup results drifted from the oracle"
+        stats[fp] = (done["found"], dict(idx.probe_stats))
+    assert stats[True][0] == stats[False][0]
+    on, off = stats[True][1], stats[False][1]
+    assert on["candidates"] == on["fp_hits"] + on["fp_false_positives"]
+    assert on["pm_load_words"] < off["pm_load_words"], (
+        f"fingerprint lane did not reduce PM probe traffic: "
+        f"{on['pm_load_words']} >= {off['pm_load_words']}")
+    assert on["candidates"] < off["candidates"], (
+        "fingerprint filter did not narrow the full-key gather set")
+    print(f"# fingerprint smoke: YCSB-C zero drift; pm_load_words "
+          f"{off['pm_load_words']} -> {on['pm_load_words']} "
+          f"({off['pm_load_words'] / max(on['pm_load_words'], 1):.1f}x), "
+          f"candidates {off['candidates']} -> {on['candidates']}, "
+          f"false-positive frac "
+          f"{on['fp_false_positives'] / max(on['candidates'], 1):.4f}")
+    return {"pm_load_fp": float(on["pm_load_words"]),
+            "pm_load_nofp": float(off["pm_load_words"]),
+            "candidates_fp": float(on["candidates"]),
+            "candidates_nofp": float(off["candidates"])}
+
+
 # the shard-scaling head-to-head: the paper's best unordered conversion
 # (P-CLHT) against its hand-crafted PM baseline (CCEH) on the same
 # plan/execute surface
@@ -548,6 +715,7 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
           f"({agg['count']} ops)")
     if batched:
         rows.extend(bench_batched(n_load, n_run))
+        rows.extend(bench_fingerprints(n_load, n_run))
         rows.extend(bench_batched_scan(n_load, n_run))
         rows.extend(bench_batched_write(n_load, n_run))
         rows.extend(bench_mixed_plan(n_load, n_run))
@@ -577,8 +745,14 @@ if __name__ == "__main__":
                          "--smoke: run the sharded smoke instead)")
     ap.add_argument("--streams", type=int, default=None,
                     help="client streams for the sharded paths")
+    ap.add_argument("--fingerprints", action="store_true",
+                    help="with --smoke: run the fingerprint probe-lane "
+                         "smoke (YCSB-C zero drift + PM-load reduction)")
     args = ap.parse_args()
     if args.smoke:
+        if args.fingerprints:
+            fingerprint_smoke()
+            raise SystemExit(0)
         if args.shards:
             trace_obj = sharded_smoke(shards=args.shards,
                                       streams=args.streams or 2)

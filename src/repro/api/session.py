@@ -20,13 +20,16 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..core import (PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan,
                     PlanResult)
-from ..core.baselines import CCEH, FastFair
+from ..core.baselines import CCEH, FastFair, LevelHashing
+from ..core.conditions import PROBE_STAT_KEYS
 from ..obs import MetricsRegistry, MetricsView
 
 # public index kinds; aliases accept the paper's P-* names (any case).
-# "cceh" and "fastfair" are the hand-crafted PM baselines on the same
-# plan surface — the head-to-head comparators of the shard-scaling
-# sweep and the adversarial workload matrix (benchmarks/matrix.py).
+# "cceh", "fastfair" and "level"/"levelhashing" are the hand-crafted
+# PM baselines on the same plan surface — the head-to-head comparators
+# of the shard-scaling sweep and the adversarial workload matrix
+# (benchmarks/matrix.py).  With the Level hashing port, all eight
+# indexes of the paper's comparison are plan-executable.
 _KINDS = {
     "clht": PCLHT,
     "art": PART,
@@ -35,6 +38,8 @@ _KINDS = {
     "masstree": PMasstree,
     "cceh": CCEH,
     "fastfair": FastFair,
+    "level": LevelHashing,
+    "levelhashing": LevelHashing,
 }
 
 
@@ -184,11 +189,12 @@ class Session:
     reachable as ``.index`` / ``.pmem`` for tooling, but the supported
     surface is this class plus ``Plan``."""
 
-    def __init__(self, index, *, kind: str):
+    def __init__(self, index, *, kind: str,
+                 metrics: Optional[MetricsRegistry] = None):
         self.index = index
         self.kind = kind
-        self.metrics = MetricsRegistry()
-        for name in ("plans", "waves", "wave_ops"):
+        self.metrics = metrics or MetricsRegistry()
+        for name in ("plans", "waves", "wave_ops") + PROBE_STAT_KEYS:
             self.metrics.counter(name)
         self.stats = MetricsView(self.metrics)
 
@@ -227,7 +233,23 @@ class Session:
         self.metrics.counter("plans").inc()
         self.metrics.counter("waves").inc(res.n_waves)
         self.metrics.counter("wave_ops").inc(sum(res.wave_widths))
+        # probe-traffic deltas (fingerprint filter + optimistic reads)
+        # mirror into the registry so Session.stats — and, for server
+        # sessions sharing one registry, Server.stats — sum exactly
+        for name, delta in res.probe.items():
+            if delta:
+                self.metrics.counter(name).inc(delta)
+        self._update_write_versions()
         return res
+
+    def _update_write_versions(self) -> None:
+        """Surface the index's per-shard write-version gauge (the
+        optimistic read path's validation input) as metrics gauges."""
+        wv = getattr(self.index, "write_versions", None)
+        if wv is None:
+            return
+        for shard, version in enumerate(wv().tolist()):
+            self.metrics.gauge(f"write_version_{shard}").set(version)
 
     def pipeline(self, *, depth: int = 4096) -> Pipeline:
         """Context manager that coalesces ops into plans of up to

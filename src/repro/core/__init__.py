@@ -17,7 +17,8 @@ from .bwtree import PBwTree
 from .masstree import PMasstree
 from .crash_testing import (CrashReport, PMSnapshot, audit_durability,
                             group_commit_boundaries, plan_crash_sweep,
-                            plan_prefix_states, run_crash_sweep)
+                            plan_prefix_states, run_crash_sweep,
+                            validation_points)
 
 __all__ = [
     "CACHELINE_BYTES", "WORD_BYTES", "WORDS_PER_LINE", "CrashPoint",
@@ -29,5 +30,5 @@ __all__ = [
     "crash_detect_fix", "register", "Arena", "PCLHT", "PART", "PHOT",
     "PBwTree", "PMasstree", "CrashReport", "PMSnapshot",
     "audit_durability", "group_commit_boundaries", "plan_crash_sweep",
-    "plan_prefix_states", "run_crash_sweep",
+    "plan_prefix_states", "run_crash_sweep", "validation_points",
 ]

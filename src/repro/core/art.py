@@ -718,8 +718,11 @@ class PART(RecipeIndex):
                 present = np.nonzero(row != NULL)[0]
                 children[i, present] = [idx_of[int(row[b])] for b in present]
         self._n_nodes_hint = N
+        from ..kernels.probe.fingerprint import fp_partial
+        leaf_fp = np.where(is_leaf != 0, fp_partial(leaf_key), 0)
         return {"children": children, "level": level, "is_leaf": is_leaf,
-                "leaf_key": leaf_key, "leaf_val": leaf_val}
+                "leaf_key": leaf_key, "leaf_val": leaf_val,
+                "leaf_fp": leaf_fp}
 
     _MIN_REBUILD_BATCH = 64  # stale-snapshot floor for an unknown-size tree
 
@@ -730,11 +733,14 @@ class PART(RecipeIndex):
 
     def _kernel_lookup(self, snapshot, queries):
         """The Pallas radix-descent path; bit-identical to scalar
-        ``lookup`` (see kernels/art_probe)."""
+        ``lookup`` (see kernels/art_probe).  The export's ``leaf_fp``
+        partial-key byte filters leaves before the full-key compare."""
         from ..kernels.art_probe import snapshot_lookup
         if snapshot.arrays is None:  # empty tree
             return None
-        return snapshot_lookup(snapshot, queries)
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)
 
     # reachability walker for arena GC
     def _walk(self) -> Iterator[Tuple[int, int]]:

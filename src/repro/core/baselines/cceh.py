@@ -339,7 +339,8 @@ class CCEH(RecipeIndex):
             return None
         keys = np.fromiter((k for k, _ in items), np.int64, len(items))
         vals = np.fromiter((v for _, v in items), np.int64, len(items))
-        return {"keys": keys, "vals": vals}
+        from ...kernels.probe.fingerprint import fp64
+        return {"keys": keys, "vals": vals, "fps": fp64(keys)}
 
     _n_entries_hint = 0
     _MIN_REBUILD_BATCH = 64
@@ -356,7 +357,9 @@ class CCEH(RecipeIndex):
         from ...kernels.scan import snapshot_lookup
         if snapshot.arrays is None:  # empty table
             return None
-        return snapshot_lookup(snapshot, queries)
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)
 
     def check_invariants(self) -> None:
         ks = list(self.keys())

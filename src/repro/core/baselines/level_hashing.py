@@ -14,8 +14,11 @@ from __future__ import annotations
 
 from typing import Iterator, Optional, Tuple
 
+import numpy as np
+
 from ..arena import Arena
-from ..conditions import Condition, ConversionSpec, RecipeIndex, register
+from ..conditions import (Condition, ConversionSpec, RecipeIndex, register,
+                          tracks_epoch)
 from ..pmem import NULL, PMem
 
 SLOTS = 4
@@ -94,6 +97,7 @@ class LevelHashing(RecipeIndex):
                     return a.load(b + 2 * s + 1)
         return None
 
+    @tracks_epoch
     def insert(self, key: int, value: int) -> bool:
         assert key != NULL
         a = self.arena
@@ -116,6 +120,7 @@ class LevelHashing(RecipeIndex):
                     a.unlock(b)
             self._resize()
 
+    @tracks_epoch
     def update(self, key: int, value: int) -> bool:
         """In-place value update: one counted store + clwb + fence on
         the value word of whichever candidate bucket holds the key.
@@ -136,6 +141,7 @@ class LevelHashing(RecipeIndex):
                 a.unlock(b)
         return self.insert(key, value)  # absent -> insert path
 
+    @tracks_epoch
     def delete(self, key: int) -> bool:
         a = self.arena
         for b in self._candidates(key):
@@ -203,6 +209,45 @@ class LevelHashing(RecipeIndex):
     def keys(self) -> Iterator[int]:
         for k, _ in self.items():
             yield k
+
+    # ------------------------------------------------------------------
+    # data-plane export: plan/execute batched read path (same shape as
+    # the CCEH port — with this, all eight indexes of the paper's
+    # comparison sit on the plan surface and in the fingerprint A/B)
+    # ------------------------------------------------------------------
+    def export_arrays(self) -> Optional[dict]:
+        """Sorted run of the live (key, value) pairs plus the ``fps``
+        fingerprint lane.  Level hashing has no order of its own, but
+        the shared kernels/scan sorted-run probe only needs *a*
+        deterministic order, and ``items`` applies the reader's
+        visibility rules — so batched lookups stay bit-identical to
+        scalar ``lookup``."""
+        items = sorted(self.items())
+        self._n_entries_hint = len(items)
+        if not items:
+            return None
+        keys = np.fromiter((k for k, _ in items), np.int64, len(items))
+        vals = np.fromiter((v for _, v in items), np.int64, len(items))
+        from ...kernels.probe.fingerprint import fp64
+        return {"keys": keys, "vals": vals, "fps": fp64(keys)}
+
+    _n_entries_hint = 0
+    _MIN_REBUILD_BATCH = 64
+
+    def _rebuild_floor(self) -> int:
+        """The export walks both levels once plus an O(n log n) sort;
+        scale the stale-snapshot floor with the live entry count."""
+        return max(self._MIN_REBUILD_BATCH, self._n_entries_hint // 4)
+
+    def _kernel_lookup(self, snapshot, queries):
+        """Shared sorted-run kernel path (kernels/scan lower bound +
+        equality), bit-identical to scalar ``lookup``."""
+        from ...kernels.scan import snapshot_lookup
+        if snapshot.arrays is None:  # empty table
+            return None
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)
 
     def check_invariants(self) -> None:
         ks = list(self.keys())

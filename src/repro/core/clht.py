@@ -453,9 +453,13 @@ class PCLHT(RecipeIndex):
     # ------------------------------------------------------------------
     # data-plane export: dense arrays for the Pallas probe kernel
     # ------------------------------------------------------------------
-    def export_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
-        """(keys, vals, next) bucket-major views + n_buckets, for batched
-        jit/Pallas lookups.  Layout matches kernels/clht_probe."""
+    def export_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     int, np.ndarray]:
+        """(keys, vals, next) bucket-major views + n_buckets + the
+        per-slot fingerprint lane (``fp64`` of each slot's key,
+        FP_EMPTY=0 on empty slots), for batched jit/Pallas lookups.
+        Layout matches kernels/clht_probe."""
+        from ..kernels.probe.fingerprint import fp64
         t = self._table()
         n = self.pmem.load(t, 0)
         total = (t.n_words - HDR_WORDS) // BUCKET_WORDS
@@ -465,11 +469,14 @@ class PCLHT(RecipeIndex):
         nxt = base[:, 6].copy()
         # chain pointers are word offsets; convert to bucket indices (-1 = none)
         nxt = np.where(nxt == NULL, -1, (nxt - HDR_WORDS) // BUCKET_WORDS)
-        return keys, vals, nxt, n
+        return keys, vals, nxt, n, fp64(keys)
 
     def _kernel_lookup(self, snapshot, queries):
         """The Pallas probe path: bit-identical to scalar ``lookup`` —
-        the probe window covers whole overflow chains and compares
-        full 64-bit keys (see kernels/clht_probe)."""
+        the probe window covers whole overflow chains, the export's
+        fingerprint lane filters candidates, and full 64-bit keys are
+        compared on fingerprint hits (see kernels/clht_probe)."""
         from ..kernels.clht_probe import snapshot_lookup
-        return snapshot_lookup(snapshot, queries)
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)

@@ -24,6 +24,16 @@ import numpy as np
 
 from .pmem import PMem, Region, CrashPoint
 
+# the probe-traffic counters every RecipeIndex carries (and every
+# PlanResult / Session.stats mirrors).  The attribution invariant —
+# candidates == fp_hits + fp_false_positives — is enforced at the
+# accounting site (kernels.probe.fingerprint.account); the merge sites
+# (plan deltas, sharded sub-results, metrics registries) sum these
+# exactly, so it holds at every aggregation level.
+PROBE_STAT_KEYS = ("fp_compares", "candidates", "fp_hits",
+                   "fp_false_positives", "pm_load_words",
+                   "optimistic_probes", "optimistic_retries")
+
 
 def tracks_epoch(method):
     """Wrap a hand-written mutator (the ported baselines' insert/
@@ -119,6 +129,13 @@ class RecipeIndex:
     N_WRITE_SHARDS = 16  # power of two; shard = top bits of the route
     SHARD_SCHEME = "hash"  # ordered indexes route by key prefix instead
 
+    # fingerprint probe lanes: exports carry a 1-byte hash per slot
+    # (kernels/probe/fingerprint) and the probe kernels gather full
+    # keys only on fingerprint hits.  Results are bit-identical either
+    # way; flipping this off switches the probe-traffic model to
+    # full-key gathers for every lane (the A/B the benchmarks measure).
+    fingerprints = True
+
     def __init__(self, pmem: PMem):
         self.pmem = pmem
         self._epoch = 0
@@ -130,6 +147,11 @@ class RecipeIndex:
         self._shard_epochs = [0] * self.N_WRITE_SHARDS
         self._all_bump = 0
         self._shard_scope: Optional[int] = None  # _write_batch targeting
+        # the snapshot that was current when the most recent write
+        # batch *started* — the only export an overlapped read wave may
+        # probe optimistically (version motion since it is then exactly
+        # that wave's writes; see _optimistic_lookup)
+        self._overlap_snap: Optional[IndexSnapshot] = None
         # stores attributable to this index's own (shard-tracked)
         # writes.  Indexes set _region_prefixes so the account covers
         # exactly their named regions: stores to *other* structures on
@@ -139,6 +161,12 @@ class RecipeIndex:
         self._region_prefixes: Tuple[str, ...] = ()
         self._accounted_stores = pmem.counters.stores
         self.shard_stats = {"refined_batches": 0, "refined_queries": 0}
+        # probe-traffic counters (see PROBE_STAT_KEYS): the kernel
+        # front-ends fold fingerprint-filter outcomes and modeled PM
+        # gather words in here; the optimistic read path adds its
+        # probe/retry tallies.  Plan execution snapshots deltas of this
+        # dict into PlanResult.probe.
+        self.probe_stats = {k: 0 for k in PROBE_STAT_KEYS}
 
     # -- the one batched entry point: operation plans ---------------------
     def execute(self, plan, *, force_kernel: bool = False,
@@ -211,6 +239,17 @@ class RecipeIndex:
 
     def _effective_shard_epochs(self) -> np.ndarray:
         return np.asarray(self._shard_epochs, np.int64) + self._all_bump
+
+    def write_versions(self) -> np.ndarray:
+        """Per-shard write-version gauge ([N_WRITE_SHARDS] int64).
+
+        Each shard's version advances exactly when a write stored into
+        it; a snapshot records the gauge at export time.  The
+        optimistic read path compares the two to decide which results
+        of a probe that overlapped a write wave are still valid
+        (``_optimistic_lookup``), and sessions surface the gauge as
+        ``write_version_{i}`` metrics."""
+        return self._effective_shard_epochs()
 
     def export_arrays(self) -> Any:
         """Dense-array export of the reachable state for batched/Pallas
@@ -306,6 +345,16 @@ class RecipeIndex:
             keys, self.N_WRITE_SHARDS, self.SHARD_SCHEME)
         results: List = [None] * len(ops)
         self._begin_writes()
+        # arm the optimistic read overlap only when the snapshot is
+        # current RIGHT NOW: any staleness predating this wave (earlier
+        # plans whose small read batches never re-exported) could hide
+        # writes that route to the same shards this wave touches, and
+        # the per-shard version check could not tell them apart
+        self._overlap_snap = (
+            self._snapshot
+            if (self._snapshot is not None
+                and self._snapshot.epoch == self._epoch_key())
+            else None)
         prev_scope = self._shard_scope
         try:
             order = order.tolist()
@@ -362,8 +411,86 @@ class RecipeIndex:
         the scalar path."""
         raise NotImplementedError
 
+    def _optimistic_lookup(self, keys: np.ndarray, written: np.ndarray
+                           ) -> Optional[List[Optional[int]]]:
+        """Version-validated optimistic read: probe the *pre-write*
+        snapshot as if the read wave had overlapped the preceding write
+        wave, then validate against the per-shard write-version gauge.
+
+        Validity argument: the probed snapshot must be the one that was
+        current when the overlapping write wave *started*
+        (``_overlap_snap``) — then every version moved since the export
+        is that wave's own writes, a write can only change the mapping
+        at its own key, and every moved shard must route some written
+        key (else a concurrent writer this path cannot reason about is
+        active and we fall back to the fenced path).  A probed key is
+        therefore stale only if it was itself written *and* its shard's
+        version actually moved — exactly those keys re-run through the
+        fenced ``_lookup_batch``; every other result from the stale
+        snapshot is already bit-identical to a fenced read.  A snapshot
+        that predates the wave (earlier plans' writes never re-exported)
+        never qualifies: staleness from before the wave could route to
+        the same shards the wave wrote, and the version check could not
+        attribute it.
+
+        Returns None when the optimistic protocol does not apply (no
+        snapshot, snapshot older than the wave, crash since export,
+        unattributable foreign stores, or a batch below the kernel
+        floor) — the caller then takes the fenced path."""
+        snap = self._snapshot
+        if snap is None or snap.shard_epochs is None:
+            return None
+        if snap is not self._overlap_snap:
+            return None  # export predates the overlapping write wave
+        if self.pmem.crashes != snap.epoch[2]:
+            return None
+        if self._write_account() != self._accounted_stores:
+            return None
+        if len(keys) < self._MIN_KERNEL_BATCH:
+            return None
+        moved = snap.shard_epochs != self.write_versions()
+        if moved.any():
+            written_shards = np.zeros(self.N_WRITE_SHARDS, bool)
+            if len(written):
+                written_shards[self.shard_route(written)] = True
+            if bool((moved & ~written_shards).any()):
+                return None  # movement we cannot attribute to the wave
+        # the overlapped probe: reads the stale arrays, no fence taken
+        if snap.arrays is None:
+            res = None  # empty at export: every un-retried key is absent
+        else:
+            try:
+                res = self._kernel_lookup(snap, keys)
+            except (NotImplementedError, ImportError):
+                return None
+        self.probe_stats["optimistic_probes"] += len(keys)
+        # a crash may land between the overlapped probe and its version
+        # re-validation; the sweep in core.crash_testing arms this point
+        self.pmem.crash_point()
+        out: List[Optional[int]] = [None] * len(keys)
+        if res is not None:
+            found, vals = res
+            out = [v if f else None
+                   for f, v in zip(found.tolist(), vals.tolist())]
+        retry = np.isin(keys, written)
+        if moved.any():
+            retry &= moved[self.shard_route(keys)]
+        else:
+            # no shard moved => the written ops were no-ops; nothing
+            # the probe returned can be stale
+            retry[:] = False
+        n_retry = int(retry.sum())
+        if n_retry:
+            self.probe_stats["optimistic_retries"] += n_retry
+            fresh = self._lookup_batch(keys[retry])  # the fenced path
+            for i, v in zip(np.nonzero(retry)[0].tolist(), fresh):
+                out[i] = v
+        return out
+
     def _lookup_batch(self, keys: Sequence[int], *,
-                      force_kernel: bool = False) -> List[Optional[int]]:
+                      force_kernel: bool = False,
+                      overlap_writes: Optional[np.ndarray] = None
+                      ) -> List[Optional[int]]:
         """Per-wave read primitive (private: callers outside core go
         through ``execute``).  Batched point lookups; results are
         bit-identical to calling ``lookup`` once per key.
@@ -374,9 +501,23 @@ class RecipeIndex:
         cheaper under the amortization point.  ``force_kernel`` skips
         the floors: callers in steady read loops (the serving decode
         path) use it to keep scalar lookups entirely off their hot
-        path.  Indexes without an array export always go scalar."""
+        path.  Indexes without an array export always go scalar.
+
+        ``overlap_writes`` (the plan scheduler's push-reads-late pass
+        passes the keys the preceding write waves stored) opts this
+        wave into the optimistic version-validated read: probe the
+        pre-write snapshot, re-validate shard versions after the
+        gather, re-run only invalidated keys fenced
+        (``_optimistic_lookup``)."""
         stale = (self._snapshot is None
                  or self._snapshot.epoch != self._epoch_key())
+        if stale and overlap_writes is not None and not force_kernel \
+                and len(keys):
+            opt = self._optimistic_lookup(
+                np.asarray(keys, np.int64),
+                np.asarray(overlap_writes, np.int64))
+            if opt is not None:
+                return opt
         if stale and not force_kernel and len(keys):
             refined = self._refined_lookup(np.asarray(keys, np.int64))
             if refined is not None:

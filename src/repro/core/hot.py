@@ -540,8 +540,11 @@ class PHOT(RecipeIndex):
             present = np.nonzero(row != NULL)[0]
             children[i, present] = [idx_of[int(row[b])] for b in present]
         self._n_nodes_hint = N
+        from ..kernels.probe.fingerprint import fp_partial
+        leaf_fp = np.where(is_leaf != 0, fp_partial(leaf_key), 0)
         return {"children": children, "level": level, "is_leaf": is_leaf,
-                "leaf_key": leaf_key, "leaf_val": leaf_val, "unit_bits": 4}
+                "leaf_key": leaf_key, "leaf_val": leaf_val,
+                "leaf_fp": leaf_fp, "unit_bits": 4}
 
     _n_nodes_hint = 0
     _MIN_REBUILD_BATCH = 64  # stale-snapshot floor for an unknown-size trie
@@ -552,8 +555,11 @@ class PHOT(RecipeIndex):
 
     def _kernel_lookup(self, snapshot, queries):
         """The Pallas radix-descent path over 4-bit units; bit-identical
-        to scalar ``lookup`` (see kernels/art_probe)."""
+        to scalar ``lookup`` (see kernels/art_probe).  The export's
+        ``leaf_fp`` byte filters leaves before the full-key compare."""
         from ..kernels.art_probe import snapshot_lookup
         if snapshot.arrays is None:  # empty trie
             return None
-        return snapshot_lookup(snapshot, queries)
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)

@@ -713,7 +713,8 @@ class PMasstree(RecipeIndex):
             return None
         keys = np.fromiter((k for k, _ in items), np.int64, len(items))
         vals = np.fromiter((v for _, v in items), np.int64, len(items))
-        return {"keys": keys, "vals": vals}
+        from ..kernels.probe.fingerprint import fp64
+        return {"keys": keys, "vals": vals, "fps": fp64(keys)}
 
     _n_entries_hint = 0
     _MIN_REBUILD_BATCH = 64
@@ -729,7 +730,9 @@ class PMasstree(RecipeIndex):
         from ..kernels.scan import snapshot_lookup
         if snapshot.arrays is None:  # empty tree
             return None
-        return snapshot_lookup(snapshot, queries)
+        return snapshot_lookup(snapshot, queries,
+                               fingerprints=self.fingerprints,
+                               stats=self.probe_stats)
 
     def _scan_export(self, snapshot):
         """Range scans reuse the lookup export — same sorted run."""

@@ -43,12 +43,13 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Any, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..kernels.conflict import DELETE, GET, PUT, SCAN, UPDATE
 from ..obs import RECORDER as _OBS
+from .conditions import PROBE_STAT_KEYS
 
 
 class OpKind(enum.IntEnum):
@@ -203,6 +204,12 @@ class PlanResult:
     found: int = 0
     acked: int = 0
     scanned: int = 0
+    # probe-traffic deltas over this plan (PROBE_STAT_KEYS): the
+    # fingerprint filter's compare/candidate/hit/false-positive
+    # tallies, the modeled PM gather words, and the optimistic read
+    # path's probe/retry counts.  Sums exactly across sub-plan merges.
+    probe: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in PROBE_STAT_KEYS})
 
     @property
     def n_waves(self) -> int:
@@ -451,6 +458,7 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
     if n == 0:
         return result
     kinds, keys, aux = plan.arrays()
+    probe0 = dict(getattr(index, "probe_stats", None) or {})
     with _OBS.span("plan.execute", n_ops=n):
         if n == 1 and collect_results and not force_kernel:
             # degenerate to the scalar path — unless the caller forced
@@ -460,6 +468,12 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
         with _OBS.span("plan.schedule", n_ops=n):
             waves = schedule_waves(kinds, keys)
         results = result.results
+        # keys the plan's write waves have stored so far: a read wave
+        # scheduled after a write wave may overlap it optimistically —
+        # probe the pre-write snapshot, then re-validate shard write
+        # versions against exactly this set (RecipeIndex
+        # ._optimistic_lookup)
+        written: Optional[np.ndarray] = None
         for wi, wave in enumerate(waves):
             idx = wave.indices
             result.wave_kinds.append(wave.kind)
@@ -467,10 +481,13 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
             with _OBS.span("plan.wave", kind=wave.kind, wave=wi,
                            width=int(idx.size)) as sp:
                 c0 = index.pmem.counters.snapshot() if sp else None
+                p0 = (dict(index.probe_stats)
+                      if sp and hasattr(index, "probe_stats") else None)
                 if wave.kind == "read":
                     with _OBS.span("plan.lookup_batch", width=int(idx.size)):
                         out = index._lookup_batch(keys[idx],
-                                                  force_kernel=force_kernel)
+                                                  force_kernel=force_kernel,
+                                                  overlap_writes=written)
                     result.found += len(out) - out.count(None)
                 elif wave.kind == "scan":
                     with _OBS.span("plan.scan_batch", width=int(idx.size)):
@@ -485,13 +502,27 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
                     with _OBS.span("plan.write_batch", width=int(idx.size)):
                         out = index._write_batch(ops)
                     result.acked += sum(map(bool, out))
+                    written = (keys[idx] if written is None
+                               else np.concatenate([written, keys[idx]]))
                 if sp:
                     d = index.pmem.counters.delta(c0)
                     sp.set(stores=d.stores, loads=d.loads, clwb=d.clwb,
                            fence=d.fence, lines_touched=d.lines_touched)
+                    if p0 is not None:
+                        ps = index.probe_stats
+                        sp.set(pm_load_words=ps["pm_load_words"]
+                               - p0["pm_load_words"],
+                               fp_candidates=ps["candidates"]
+                               - p0["candidates"],
+                               optimistic_retries=ps["optimistic_retries"]
+                               - p0["optimistic_retries"])
             if collect_results:
                 for i, r in zip(idx.tolist(), out):
                     results[i] = r
+    pstats = getattr(index, "probe_stats", None)
+    if pstats:
+        for k in result.probe:
+            result.probe[k] = pstats.get(k, 0) - probe0.get(k, 0)
     return result
 
 

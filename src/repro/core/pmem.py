@@ -379,6 +379,14 @@ class PMem:
             self.crash_after_store = None
             raise CrashPoint()
 
+    def crash_point(self) -> None:
+        """An explicit crash-injection point for protocol windows that
+        contain no store of their own — e.g. between an optimistic
+        read's overlapped probe and its version re-validation.  Counts
+        (and may fire) exactly like the store-path crash points, so
+        ``crash_calls``-offset sweeps enumerate these windows too."""
+        self._maybe_crash()
+
     def crash(self, mode: str = "powerfail", evict_probability: float = 0.0) -> None:
         """Simulate the machine dying.
 

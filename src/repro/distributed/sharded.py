@@ -219,6 +219,11 @@ class ShardedIndex:
                 result.wave_widths.extend(r.wave_widths)
                 result.found += r.found
                 result.acked += r.acked
+                # probe-traffic deltas sum exactly across shards (the
+                # attribution invariant candidates == fp_hits +
+                # fp_false_positives is per-count additive)
+                for name, delta in r.probe.items():
+                    result.probe[name] = result.probe.get(name, 0) + delta
         if crashed is not None:
             # surface the crash exactly like an unsharded execute: the
             # plan's results are lost (un-acked), the caller decides

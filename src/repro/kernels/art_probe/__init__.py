@@ -1,6 +1,7 @@
 from .kernel import art_descend
 from .ops import batched_lookup, key_bytes, key_units, snapshot_lookup
-from .ref import descend_ref
+from .ref import descend_fp_ref, descend_ref, leaf_fp_lane
 
 __all__ = ["art_descend", "batched_lookup", "key_bytes", "key_units",
-           "snapshot_lookup", "descend_ref"]
+           "snapshot_lookup", "descend_ref", "descend_fp_ref",
+           "leaf_fp_lane"]

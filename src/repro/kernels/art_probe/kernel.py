@@ -35,15 +35,18 @@ QUERY_BLOCK = 4096
 KEY_BYTES = 8
 
 
-def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
-                    is_leaf_ref, lklo_ref, lkhi_ref, lvlo_ref, lvhi_ref,
-                    found_ref, olo_ref, ohi_ref):
+def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, qfp_ref, children_ref,
+                    level_ref, is_leaf_ref, lfp_ref, lklo_ref, lkhi_ref,
+                    lvlo_ref, lvhi_ref, found_ref, olo_ref, ohi_ref,
+                    nenc_ref, nfp_ref, nfalse_ref):
     qbytes = qbytes_ref[...]          # [QB, KEY_BYTES]
     qlo = qlo_ref[...][:, 0]          # [QB]
     qhi = qhi_ref[...][:, 0]
+    qfp = qfp_ref[...][:, 0]
     children = children_ref[...]      # [N, 256]
     level = level_ref[...][:, 0]      # [N]
     is_leaf = is_leaf_ref[...][:, 0]
+    lfp = lfp_ref[...][:, 0]          # partial-key fingerprint lane
     lklo = lklo_ref[...][:, 0]
     lkhi = lkhi_ref[...][:, 0]
     lvlo = lvlo_ref[...][:, 0]
@@ -54,16 +57,27 @@ def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
     found = jnp.zeros((QB,), jnp.bool_)
     olo = jnp.zeros((QB,), jnp.int32)
     ohi = jnp.zeros((QB,), jnp.int32)
+    nenc = jnp.zeros((QB,), jnp.int32)    # leaf encounters (fp compares)
+    nfp = jnp.zeros((QB,), jnp.int32)     # fingerprint matches
+    nfalse = jnp.zeros((QB,), jnp.int32)  # matches the full key rejects
     # levels strictly increase along any path, so U internal hops + the
     # leaf check bound the descent; finished lanes just idle
     for _ in range(U + 1):
-        leaf = is_leaf[node] != 0
+        leaf = active & (is_leaf[node] != 0)
+        # fingerprint pre-pass: the leaf's inline partial-key byte is
+        # compared first; the full 64-bit key words are gathered only
+        # on a match (a true hit always matches — same byte function
+        # on both sides)
+        fpmatch = leaf & (lfp[node] == qfp)
         # leaf verification: full 64-bit key AND live (non-tombstone) value
-        hit = (active & leaf & (lklo[node] == qlo) & (lkhi[node] == qhi)
+        hit = (fpmatch & (lklo[node] == qlo) & (lkhi[node] == qhi)
                & ((lvlo[node] != 0) | (lvhi[node] != 0)))
         found = found | hit
         olo = jnp.where(hit, lvlo[node], olo)
         ohi = jnp.where(hit, lvhi[node], ohi)
+        nenc = nenc + leaf.astype(jnp.int32)
+        nfp = nfp + fpmatch.astype(jnp.int32)
+        nfalse = nfalse + (fpmatch & ~hit).astype(jnp.int32)
         active = active & ~leaf
         lvl = jnp.clip(level[node], 0, U - 1)
         byte = jnp.take_along_axis(qbytes, lvl[:, None], axis=1)[:, 0]
@@ -73,17 +87,24 @@ def _descend_kernel(qbytes_ref, qlo_ref, qhi_ref, children_ref, level_ref,
     found_ref[...] = found[:, None]
     olo_ref[...] = olo[:, None]
     ohi_ref[...] = ohi[:, None]
+    nenc_ref[...] = nenc[:, None]
+    nfp_ref[...] = nfp[:, None]
+    nfalse_ref[...] = nfalse[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
-def art_descend(qbytes, qlo, qhi, children, level, is_leaf,
+def art_descend(qbytes, qlo, qhi, qfp, children, level, is_leaf, lfp,
                 lklo, lkhi, lvlo, lvhi, *,
                 query_block: int = QUERY_BLOCK, interpret: bool = True):
     """qbytes: [Q, U] int32 big-endian key units (U=8 bytes for P-ART,
-    U=16 nibbles for P-HOT); qlo/qhi: [Q] int32 key halves; children:
-    [N, 2**unit_bits] int32 (-1 none); level/is_leaf/leaf key-value
-    halves: [N] int32.  Returns (found [Q] bool, value_lo, value_hi
-    [Q] int32)."""
+    U=16 nibbles for P-HOT); qlo/qhi: [Q] int32 key halves; qfp: [Q]
+    int32 partial-key fingerprints (fingerprint.fp_partial); children:
+    [N, 2**unit_bits] int32 (-1 none); level/is_leaf/lfp/leaf key-value
+    halves: [N] int32 (lfp is the export's ``leaf_fp`` lane, 0 for
+    non-leaf rows).  Returns (found [Q] bool, value_lo, value_hi [Q]
+    int32, n_leaf_checks, n_fp_match, n_fp_false [Q] int32) — found and
+    values are unchanged by the fingerprint pre-pass; the counts feed
+    the probe-traffic model."""
     Q, U = qbytes.shape
     N, fan = children.shape
     qb = min(query_block, Q)
@@ -92,19 +113,24 @@ def art_descend(qbytes, qlo, qhi, children, level, is_leaf,
     qtile = lambda w: pl.BlockSpec((qb, w), lambda i: (i, 0))
     bcast = lambda w: pl.BlockSpec((N, w), lambda i: (0, 0))
     col = lambda a: a.reshape(-1, 1)
-    found, olo, ohi = pl.pallas_call(
+    found, olo, ohi, nenc, nfp, nfalse = pl.pallas_call(
         _descend_kernel,
         grid=grid,
-        in_specs=[qtile(U), qtile(1), qtile(1),
-                  bcast(fan), bcast(1), bcast(1),
+        in_specs=[qtile(U), qtile(1), qtile(1), qtile(1),
+                  bcast(fan), bcast(1), bcast(1), bcast(1),
                   bcast(1), bcast(1), bcast(1), bcast(1)],
-        out_specs=[qtile(1), qtile(1), qtile(1)],
+        out_specs=[qtile(1), qtile(1), qtile(1),
+                   qtile(1), qtile(1), qtile(1)],
         out_shape=[
             jax.ShapeDtypeStruct((Q, 1), jnp.bool_),
             jax.ShapeDtypeStruct((Q, 1), jnp.int32),
             jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(qbytes, col(qlo), col(qhi), children, col(level), col(is_leaf),
-      col(lklo), col(lkhi), col(lvlo), col(lvhi))
-    return found[:, 0], olo[:, 0], ohi[:, 0]
+    )(qbytes, col(qlo), col(qhi), col(qfp), children, col(level),
+      col(is_leaf), col(lfp), col(lklo), col(lkhi), col(lvlo), col(lvhi))
+    return (found[:, 0], olo[:, 0], ohi[:, 0],
+            nenc[:, 0], nfp[:, 0], nfalse[:, 0])

@@ -4,18 +4,26 @@ Splits 64-bit leaf words into int32 halves, extracts big-endian key
 units (8-bit bytes for P-ART, 4-bit nibbles for P-HOT — the export's
 ``unit_bits`` field selects), pads the query batch to a whole number of
 kernel blocks, and recombines the halves of the result.
+
+The descent carries the export's ``leaf_fp`` partial-key fingerprint
+lane: each leaf's inline byte is compared before the full 64-bit key
+words, and the filter's hit/false-positive counts plus the modeled PM
+gather traffic fold into the caller's ``stats`` dict (see
+kernels.probe.fingerprint.account).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ...obs import RECORDER as _OBS
 from ..probe import combine64, pad_queries, split64
+from ..probe.fingerprint import account, fp_partial
 from .kernel import QUERY_BLOCK, art_descend
+from .ref import leaf_fp_lane
 
 KEY_BYTES = 8
 
@@ -40,44 +48,65 @@ def _prepare(arrays: Dict[str, np.ndarray]) -> tuple:
     """Device-ready node pages: split leaf words, convert once."""
     lklo, lkhi = split64(arrays["leaf_key"])
     lvlo, lvhi = split64(arrays["leaf_val"])
+    lfp = leaf_fp_lane(arrays).astype(np.int32)
     return (int(arrays.get("unit_bits", 8)),
             jnp.asarray(arrays["children"]),
             jnp.asarray(arrays["level"], jnp.int32),
             jnp.asarray(arrays["is_leaf"], jnp.int32),
+            jnp.asarray(lfp),
             jnp.asarray(lklo), jnp.asarray(lkhi),
             jnp.asarray(lvlo), jnp.asarray(lvhi))
 
 
-def _descend(queries: np.ndarray, pages: tuple, *, interpret: bool
-             ) -> Tuple[np.ndarray, np.ndarray]:
+def _descend(queries: np.ndarray, pages: tuple, *,
+             fingerprints: bool = True, stats: Optional[dict] = None,
+             interpret: bool) -> Tuple[np.ndarray, np.ndarray]:
     unit_bits, *node_pages = pages
     q = np.asarray(queries, np.int64)
     Q = q.shape[0]
     pad = pad_queries(Q)
     with _OBS.span("kernel.art_probe", batch=Q, padded=Q + pad,
-                   pad_ratio=pad / max(Q + pad, 1), unit_bits=unit_bits):
+                   pad_ratio=pad / max(Q + pad, 1), unit_bits=unit_bits,
+                   fingerprints=fingerprints) as sp:
         if pad:
             q = np.pad(q, (0, pad))  # padded lanes miss at the leaf check
         qb = min(QUERY_BLOCK, q.shape[0])
         qlo, qhi = split64(q)
-        found, olo, ohi = art_descend(
+        qfp = fp_partial(q).astype(np.int32)
+        found, olo, ohi, nenc, nfp, nfalse = art_descend(
             jnp.asarray(key_units(q, unit_bits)), jnp.asarray(qlo),
-            jnp.asarray(qhi), *node_pages, query_block=qb,
+            jnp.asarray(qhi), jnp.asarray(qfp), *node_pages, query_block=qb,
             interpret=interpret)
         found = np.asarray(found)[:Q]
         values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+        # lanes = leaves actually reached (the radix descent has no
+        # fixed window; internal hops are index words, not key lanes)
+        lanes = int(np.asarray(nenc)[:Q].sum())
+        if fingerprints:
+            cand = int(np.asarray(nfp)[:Q].sum())
+            false = int(np.asarray(nfalse)[:Q].sum())
+            account(stats, lanes=lanes, fp_candidates=cand,
+                    fp_hits=cand - false, fp_false=false, fingerprints=True)
+            if sp:
+                sp.set(fp_candidates=cand, fp_false_positives=false)
+        else:
+            account(stats, lanes=lanes, fp_candidates=0, fp_hits=0,
+                    fp_false=0, fingerprints=False)
     return found, np.where(found, values, 0)
 
 
 def batched_lookup(queries: np.ndarray, arrays: Dict[str, np.ndarray], *,
+                   fingerprints: bool = True, stats: Optional[dict] = None,
                    interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
     """queries: [Q] int64; arrays: PART/PHOT export_arrays output.
     Returns (found [Q] bool, values [Q] int64), bit-identical to the
     scalar ``lookup`` against the same snapshot."""
-    return _descend(queries, _prepare(arrays), interpret=interpret)
+    return _descend(queries, _prepare(arrays), fingerprints=fingerprints,
+                    stats=stats, interpret=interpret)
 
 
-def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
+def snapshot_lookup(snap, queries: np.ndarray, *, fingerprints: bool = True,
+                    stats: Optional[dict] = None, interpret: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched lookup against an ``IndexSnapshot`` of PART or PHOT node
     pages; the split + device conversion is memoized on the snapshot."""
@@ -85,4 +114,5 @@ def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
     if pages is None:
         pages = _prepare(snap.arrays)
         snap.cache["art_probe"] = pages
-    return _descend(queries, pages, interpret=interpret)
+    return _descend(queries, pages, fingerprints=fingerprints, stats=stats,
+                    interpret=interpret)

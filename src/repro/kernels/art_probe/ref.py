@@ -6,35 +6,75 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+from ..probe.fingerprint import fp_partial
+
 KEY_BYTES = 8
+
+
+def leaf_fp_lane(arrays: Dict[str, np.ndarray]) -> np.ndarray:
+    """The export's partial-key fingerprint lane, or the canonical
+    reconstruction when the export predates it: ``fp_partial`` of each
+    leaf's key, 0 (FP_EMPTY) on non-leaf rows."""
+    lane = arrays.get("leaf_fp")
+    if lane is not None:
+        return np.asarray(lane, np.int64)
+    is_leaf = np.asarray(arrays["is_leaf"]) != 0
+    return np.where(is_leaf, fp_partial(arrays["leaf_key"]), 0)
 
 
 def descend_ref(queries: np.ndarray, arrays: Dict[str, np.ndarray]
                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Same descent as kernel.py, scalar per query: trust ``level``,
     hop the child rows by key unit, verify the full key at the leaf."""
+    found, vals, _, _, _ = descend_fp_ref(queries, arrays)
+    return found, vals
+
+
+def descend_fp_ref(queries: np.ndarray, arrays: Dict[str, np.ndarray]
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                              np.ndarray, np.ndarray]:
+    """Scalar descent mirroring the fingerprinted kernel lane-for-lane.
+
+    Returns (found [Q] bool, vals [Q] int64, n_leaf_checks, n_fp_match,
+    n_fp_false [Q] int64): per query, the number of leaves whose
+    fingerprint byte was compared, how many matched, and how many of
+    those the full 64-bit key (or a tombstone value) rejected.  found
+    and vals are identical to ``descend_ref`` — the fingerprint
+    pre-pass never drops a true hit because the same byte function is
+    applied on both sides."""
     children = arrays["children"]
     level = arrays["level"]
     is_leaf = arrays["is_leaf"]
     leaf_key = arrays["leaf_key"]
     leaf_val = arrays["leaf_val"]
+    leaf_fp = leaf_fp_lane(arrays)
     unit_bits = int(arrays.get("unit_bits", 8))
     n_units = 64 // unit_bits
     mask = (1 << unit_bits) - 1
-    Q = len(queries)
+    q = np.asarray(queries, np.int64)
+    qfp = fp_partial(q)
+    Q = len(q)
     found = np.zeros(Q, bool)
     vals = np.zeros(Q, np.int64)
-    for i, key in enumerate(np.asarray(queries, np.int64)):
+    nenc = np.zeros(Q, np.int64)
+    nfp = np.zeros(Q, np.int64)
+    nfalse = np.zeros(Q, np.int64)
+    for i, key in enumerate(q):
         node = 0
         for _ in range(n_units + 1):
             if is_leaf[node]:
-                if leaf_key[node] == key and leaf_val[node] != 0:
-                    found[i] = True
-                    vals[i] = leaf_val[node]
+                nenc[i] += 1
+                if leaf_fp[node] == qfp[i]:
+                    nfp[i] += 1
+                    if leaf_key[node] == key and leaf_val[node] != 0:
+                        found[i] = True
+                        vals[i] = leaf_val[node]
+                    else:
+                        nfalse[i] += 1
                 break
             shift = unit_bits * (n_units - 1 - int(level[node]))
             child = children[node, (int(key) >> shift) & mask]
             if child < 0:
                 break
             node = child
-    return found, vals
+    return found, vals, nenc, nfp, nfalse

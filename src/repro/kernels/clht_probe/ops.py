@@ -15,7 +15,7 @@ per key, collisions possible) for kernel benchmarking.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,8 @@ import numpy as np
 
 from ...obs import RECORDER as _OBS
 from ..probe import combine64, pad_queries, probe64_lookup, split64
-from ..probe.kernel import QUERY_BLOCK, probe64
+from ..probe.fingerprint import account, fp64
+from ..probe.kernel import QUERY_BLOCK, probe64, probe64_fp
 from .kernel import clht_probe
 
 SLOTS = 3
@@ -42,47 +43,61 @@ def mix64(keys: np.ndarray) -> np.ndarray:
 
 def batched_lookup(queries: np.ndarray, keys: np.ndarray, vals: np.ndarray,
                    nxt: np.ndarray, *, n_buckets: int,
+                   fps: Optional[np.ndarray] = None, fingerprints: bool = True,
+                   stats: Optional[dict] = None,
                    interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
     """queries: [Q] int64; keys/vals: [R, SLOTS] int64 bucket-major slot
-    arrays; nxt: [R] int64 chain row index (-1 none) — the layout of
-    PCLHT.export_arrays.  Returns (found [Q] bool, values [Q] int64)."""
+    arrays; nxt: [R] int64 chain row index (-1 none); fps: [R, SLOTS]
+    uint8 fingerprint lane — the layout of PCLHT.export_arrays.
+    Returns (found [Q] bool, values [Q] int64)."""
     q = np.asarray(queries, np.int64)
     bucket = (mix64(q) % _U64(n_buckets)).astype(np.int64)
     return probe64_lookup(q, bucket, np.asarray(nxt, np.int64),
-                          keys, vals, interpret=interpret)
+                          keys, vals, fps=fps, fingerprints=fingerprints,
+                          stats=stats, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("depth", "interpret"))
-def _gather_probe(bucket, qlo, qhi, klo, khi, vlo, vhi, nxt, *,
-                  depth: int, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("depth", "use_fp", "interpret"))
+def _gather_probe(bucket, qlo, qhi, qfp, klo, khi, vlo, vhi, fps, nxt, *,
+                  depth: int, use_fp: bool, interpret: bool):
     """Fused probe: the XLA gather chases each query's overflow chain
     (``depth`` = the snapshot's longest chain) and feeds the windows
-    straight to the probe64 kernel — nothing materializes on the host."""
+    straight to the probe64 kernel — nothing materializes on the host.
+    With ``use_fp`` the fingerprint lane is windowed alongside and the
+    fingerprint-compare pre-pass kernel runs instead."""
     rows = []
     cur = bucket
     for _ in range(depth):
         rows.append(cur)
         cur = jnp.where(cur >= 0, nxt[jnp.maximum(cur, 0)], -1)
+    arrays = (klo, khi, vlo, vhi) + ((fps,) if use_fp else ())
     windows = []
-    for arr in (klo, khi, vlo, vhi):
+    for arr in arrays:
         parts = [jnp.where(r[:, None] >= 0, arr[jnp.maximum(r, 0)], 0)
                  for r in rows]
         windows.append(jnp.concatenate(parts, axis=1))
     qb = min(QUERY_BLOCK, qlo.shape[0])
+    if use_fp:
+        return probe64_fp(qlo, qhi, qfp, *windows, query_block=qb,
+                          interpret=interpret)
     return probe64(qlo, qhi, *windows, query_block=qb, interpret=interpret)
 
 
-def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
+def snapshot_lookup(snap, queries: np.ndarray, *, fingerprints: bool = True,
+                    stats: Optional[dict] = None, interpret: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Batched lookup against an ``IndexSnapshot`` of PCLHT arrays.
 
     Per epoch (memoized on the snapshot): split the table into int32
-    halves, ship it to the device, and measure the longest overflow
-    chain.  Per batch: 64-bit bucket hash on the host (splitmix64 needs
-    real uint64), then one fused gather+probe call."""
+    halves (plus the export's fingerprint lane), ship it to the
+    device, and measure the longest overflow chain.  Per batch: 64-bit
+    bucket hash on the host (splitmix64 needs real uint64), then one
+    fused gather+probe call — fingerprint pre-pass first when
+    ``fingerprints`` is on, with filter counts folded into ``stats``."""
     prepared = snap.cache.get("clht_probe")
     if prepared is None:
-        keys, vals, nxt, n = snap.arrays
+        keys, vals, nxt, n, fps = snap.arrays
         nxt = np.asarray(nxt, np.int64)
         depth, cur = 1, nxt[nxt >= 0]
         while cur.size and depth < 64:  # longest chain in this epoch
@@ -90,25 +105,41 @@ def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
             hops = nxt[cur]
             cur = hops[hops >= 0]
         halves = [jnp.asarray(h) for kv in (keys, vals) for h in split64(kv)]
-        prepared = (halves, jnp.asarray(nxt.astype(np.int32)), depth, int(n))
+        prepared = (halves, jnp.asarray(np.asarray(fps, np.int32)),
+                    jnp.asarray(nxt.astype(np.int32)), depth, int(n))
         snap.cache["clht_probe"] = prepared
-    halves, nxt_dev, depth, n = prepared
+    halves, fps_dev, nxt_dev, depth, n = prepared
     q = np.asarray(queries, np.int64)
     Q = q.shape[0]
+    W = depth * SLOTS
     pad = pad_queries(Q)
     with _OBS.span("kernel.clht_probe", batch=Q, padded=Q + pad,
-                   pad_ratio=pad / max(Q + pad, 1), depth=depth):
+                   pad_ratio=pad / max(Q + pad, 1), depth=depth,
+                   fingerprints=fingerprints) as sp:
         if pad:
             # padded queries are 0 == the empty-slot sentinel; they probe
             # bucket mix64(0) % n and the rows are sliced off below
             q = np.pad(q, (0, pad))
         bucket = (mix64(q) % _U64(n)).astype(np.int32)
         qlo, qhi = split64(q)
-        found, olo, ohi = _gather_probe(
-            jnp.asarray(bucket), jnp.asarray(qlo), jnp.asarray(qhi), *halves,
-            nxt_dev, depth=depth, interpret=interpret)
+        qfp = fp64(q).astype(np.int32)
+        out = _gather_probe(
+            jnp.asarray(bucket), jnp.asarray(qlo), jnp.asarray(qhi),
+            jnp.asarray(qfp), *halves, fps_dev, nxt_dev, depth=depth,
+            use_fp=fingerprints, interpret=interpret)
+        found, olo, ohi = out[:3]
         found = np.asarray(found)[:Q]
         values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+        if fingerprints:
+            cand = int(np.asarray(out[3])[:Q].sum())
+            false = int(np.asarray(out[4])[:Q].sum())
+            account(stats, lanes=Q * W, fp_candidates=cand,
+                    fp_hits=cand - false, fp_false=false, fingerprints=True)
+            if sp:
+                sp.set(fp_candidates=cand, fp_false_positives=false)
+        else:
+            account(stats, lanes=Q * W, fp_candidates=0, fp_hits=0,
+                    fp_false=0, fingerprints=False)
     return found, np.where(found, values, 0)
 
 

@@ -1,0 +1,94 @@
+"""Fingerprint lane primitives (Dash-style, PAPERS.md).
+
+A fingerprint is a 1-byte digest of a slot's key that rides the
+snapshot export next to the full 64-bit words.  The probe kernels
+compare the fingerprint lane first and only gather (and full-compare)
+the 64-bit key/value words of slots whose fingerprint matches the
+query's — 8 candidates per gathered memory word instead of one key
+half, which is where Dash's PM hash scaling comes from.
+
+Two lanes exist:
+
+* ``fp64``  — splitmix64 top byte, for hash-bucket and sorted-run slot
+  arrays (CLHT buckets, CCEH/LevelHashing/FAST&FAIR/Masstree/BwTree
+  sorted runs).
+* ``fp_partial`` — the low key byte, for radix node pages (ART/HOT
+  leaves): the partial-key byte a real radix node would keep inline.
+
+Both reserve value 0 for *empty* (an empty slot or a non-leaf node):
+a live key's fingerprint is remapped ``0 -> 1``.  Query fingerprints
+use the same function, so a true hit always fingerprint-matches — the
+filter can only admit false positives, never drop a hit — and, since
+queries are never the NULL word, a query fingerprint is never 0 and
+empty slots never match.
+
+``account`` is the shared probe-traffic model: a full-key candidate
+verification costs 2 PM words (key + value), the fingerprint lane
+costs 1 byte per compared lane.  It feeds the ``probe_stats`` dict on
+``RecipeIndex`` (same key set as ``conditions.PROBE_STAT_KEYS``).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+_U64 = np.uint64
+
+#: fingerprint value reserved for empty slots / non-leaf nodes
+FP_EMPTY = 0
+
+
+def _mix64(keys: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer (matches clht_probe.mix64)."""
+    z = keys.astype(np.uint64) + _U64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return z ^ (z >> _U64(31))
+
+
+def fp64(keys: np.ndarray) -> np.ndarray:
+    """1-byte hash fingerprints: splitmix64 top byte, 0 reserved for
+    empty (NULL-keyed) slots, live fingerprints remapped 0 -> 1."""
+    k = np.asarray(keys)
+    fp = (_mix64(k) >> _U64(56)).astype(np.uint8)
+    fp = fp + (fp == 0)
+    return np.where(k == 0, np.uint8(FP_EMPTY), fp).astype(np.uint8)
+
+
+def fp_partial(keys: np.ndarray) -> np.ndarray:
+    """1-byte partial-key fingerprints (the low key byte) for radix
+    leaf pages; the 0 -> 1 remap reserves 0 for non-leaf rows."""
+    b = (np.asarray(keys).astype(np.uint64) & _U64(0xFF)).astype(np.uint8)
+    return (b + (b == 0)).astype(np.uint8)
+
+
+def account(stats: Optional[dict], *, lanes: int, fp_candidates: int,
+            fp_hits: int, fp_false: int, fingerprints: bool) -> None:
+    """Fold one probe dispatch into a ``probe_stats`` dict.
+
+    ``lanes`` is the number of candidate lanes the fingerprint lane
+    compared (or, with fingerprints off, full-compared); with
+    fingerprints on, ``fp_candidates`` lanes survived the filter and
+    were fully verified, ``fp_hits`` of them matched the full key and
+    ``fp_false`` did not (``fp_candidates == fp_hits + fp_false`` —
+    the exact-attribution invariant the tests pin down).  The modeled
+    PM traffic charges 2 words (key + value) per full verification
+    plus 1 byte per fingerprint-lane compare."""
+    if stats is None:
+        return
+    if fingerprints:
+        assert fp_candidates == fp_hits + fp_false, \
+            (fp_candidates, fp_hits, fp_false)
+        stats["fp_compares"] += int(lanes)
+        stats["candidates"] += int(fp_candidates)
+        stats["fp_hits"] += int(fp_hits)
+        stats["fp_false_positives"] += int(fp_false)
+        stats["pm_load_words"] += (int(lanes) + 7) // 8 + 2 * int(fp_candidates)
+    else:
+        stats["candidates"] += int(lanes)
+        stats["pm_load_words"] += 2 * int(lanes)
+
+
+__all__ = ["FP_EMPTY", "account", "fp64", "fp_partial"]

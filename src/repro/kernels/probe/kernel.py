@@ -40,6 +40,70 @@ def _probe64_kernel(qlo_ref, qhi_ref, klo_ref, khi_ref, vlo_ref, vhi_ref,
     ohi_ref[...] = jnp.where(found, ohi, 0)
 
 
+def _probe64_fp_kernel(qlo_ref, qhi_ref, qfp_ref, klo_ref, khi_ref,
+                       vlo_ref, vhi_ref, wfp_ref, found_ref, olo_ref,
+                       ohi_ref, nfp_ref, nfalse_ref):
+    """probe64 with a fingerprint-lane pre-pass: a lane's 64-bit key
+    halves are compared only where its 1-byte fingerprint matched the
+    query's (fingerprint.fp64 on both sides, so a true hit always
+    passes the filter).  Two extra outputs feed the probe-traffic
+    model: per-query fingerprint-match and false-positive counts."""
+    qlo = qlo_ref[...]  # [QB, 1]
+    qhi = qhi_ref[...]
+    qfp = qfp_ref[...]
+    klo = klo_ref[...]  # [QB, W]
+    khi = khi_ref[...]
+    wfp = wfp_ref[...]
+    # the fp pre-pass: empty slots carry FP_EMPTY=0 and a query fp is
+    # never 0, so padding/empty lanes can never pass the filter
+    fphit = wfp == qfp
+    # full verification, gathered only for filter survivors
+    hit = fphit & (klo == qlo) & (khi == qhi)
+    found = jnp.any(hit, axis=1, keepdims=True)
+    idx = jnp.argmax(hit.astype(jnp.int32), axis=1)  # first hit wins
+    onehot = jax.lax.broadcasted_iota(jnp.int32, klo.shape, 1) == idx[:, None]
+    olo = jnp.sum(jnp.where(onehot, vlo_ref[...], 0), axis=1, keepdims=True)
+    ohi = jnp.sum(jnp.where(onehot, vhi_ref[...], 0), axis=1, keepdims=True)
+    found_ref[...] = found
+    olo_ref[...] = jnp.where(found, olo, 0)
+    ohi_ref[...] = jnp.where(found, ohi, 0)
+    nfp_ref[...] = jnp.sum(fphit.astype(jnp.int32), axis=1, keepdims=True)
+    nfalse_ref[...] = jnp.sum((fphit & ~hit).astype(jnp.int32), axis=1,
+                              keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
+def probe64_fp(qlo, qhi, qfp, klo, khi, vlo, vhi, wfp, *,
+               query_block: int = QUERY_BLOCK, interpret: bool = True):
+    """Fingerprinted probe64.  qfp: [Q] int32 query fingerprints; wfp:
+    [Q, W] int32 window fingerprints (fingerprint.fp64 of the window
+    keys, 0 = empty).  Returns (found [Q] bool, value_lo, value_hi,
+    n_fp_match [Q] int32, n_fp_false [Q] int32); found/values are
+    bit-identical to ``probe64`` over the same windows."""
+    Q, W = klo.shape
+    qb = min(query_block, Q)
+    assert Q % qb == 0, (Q, qb)
+    grid = (Q // qb,)
+    win = pl.BlockSpec((qb, W), lambda i: (i, 0))
+    col = pl.BlockSpec((qb, 1), lambda i: (i, 0))
+    found, olo, ohi, nfp, nfalse = pl.pallas_call(
+        _probe64_fp_kernel,
+        grid=grid,
+        in_specs=[col, col, col, win, win, win, win, win],
+        out_specs=[col, col, col, col, col],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qlo.reshape(Q, 1), qhi.reshape(Q, 1), qfp.reshape(Q, 1),
+      klo, khi, vlo, vhi, wfp)
+    return (found[:, 0], olo[:, 0], ohi[:, 0], nfp[:, 0], nfalse[:, 0])
+
+
 @functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
 def probe64(qlo, qhi, klo, khi, vlo, vhi, *,
             query_block: int = QUERY_BLOCK, interpret: bool = True):

@@ -16,8 +16,11 @@ from typing import List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from typing import Optional
+
 from ...obs import RECORDER as _OBS
-from .kernel import QUERY_BLOCK, probe64
+from .fingerprint import account, fp64
+from .kernel import QUERY_BLOCK, probe64, probe64_fp
 
 LANES = 128  # pad probe windows to whole VREG rows
 
@@ -85,18 +88,30 @@ def pad_queries(n: int, block: int = QUERY_BLOCK) -> int:
 
 
 def probe64_windows(queries: np.ndarray, split_windows: Sequence[np.ndarray],
-                    *, interpret: bool = True
+                    *, fp_window: Optional[np.ndarray] = None,
+                    fingerprints: bool = True, stats: Optional[dict] = None,
+                    interpret: bool = True
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Run probe64 over pre-gathered, pre-split windows.
 
     queries: [Q] int64; split_windows: (klo, khi, vlo, vhi), each
-    [Q, W] int32.  Returns (found [Q] bool, values [Q] int64)."""
+    [Q, W] int32.  Returns (found [Q] bool, values [Q] int64).
+
+    With ``fp_window`` (the windowed fingerprint lane, [Q, W] with
+    FP_EMPTY=0 where the key lane is 0-padded) and ``fingerprints``
+    on, the fingerprint-compare pre-pass runs: full keys are verified
+    only where the 1-byte lane matched.  Results are bit-identical
+    either way (a true hit always fingerprint-matches); the filter's
+    hit/false-positive counts and the modeled PM gather traffic fold
+    into ``stats`` (see fingerprint.account)."""
     Q = queries.shape[0]
     klo, khi, vlo, vhi = split_windows
+    W = int(klo.shape[1])
+    use_fp = fingerprints and fp_window is not None
     pad = pad_queries(Q)
     with _OBS.span("kernel.probe64", batch=Q, padded=Q + pad,
                    pad_ratio=pad / max(Q + pad, 1),
-                   window=int(klo.shape[1])):
+                   window=W, fingerprints=use_fp) as sp:
         if pad:
             # padded queries are 0 == the empty-slot sentinel, so they
             # may "hit" padding slots — harmless, rows are sliced below
@@ -105,27 +120,56 @@ def probe64_windows(queries: np.ndarray, split_windows: Sequence[np.ndarray],
                                   for w in (klo, khi, vlo, vhi))
         qlo, qhi = split64(queries)
         qb = min(QUERY_BLOCK, qlo.shape[0])
-        found, olo, ohi = probe64(
-            jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(klo),
-            jnp.asarray(khi), jnp.asarray(vlo), jnp.asarray(vhi),
-            query_block=qb, interpret=interpret)
+        if use_fp:
+            if pad:
+                fp_window = np.pad(fp_window, ((0, pad), (0, 0)))
+            qfp = fp64(queries).astype(np.int32)
+            found, olo, ohi, nfp, nfalse = probe64_fp(
+                jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(qfp),
+                jnp.asarray(klo), jnp.asarray(khi), jnp.asarray(vlo),
+                jnp.asarray(vhi), jnp.asarray(fp_window.astype(np.int32)),
+                query_block=qb, interpret=interpret)
+        else:
+            found, olo, ohi = probe64(
+                jnp.asarray(qlo), jnp.asarray(qhi), jnp.asarray(klo),
+                jnp.asarray(khi), jnp.asarray(vlo), jnp.asarray(vhi),
+                query_block=qb, interpret=interpret)
         found = np.asarray(found)[:Q]
         values = combine64(np.asarray(olo)[:Q], np.asarray(ohi)[:Q])
+        if use_fp:
+            # counters over the real (un-padded) query rows only
+            cand = int(np.asarray(nfp)[:Q].sum())
+            false = int(np.asarray(nfalse)[:Q].sum())
+            account(stats, lanes=Q * W, fp_candidates=cand,
+                    fp_hits=cand - false, fp_false=false, fingerprints=True)
+            if sp:
+                sp.set(fp_candidates=cand, fp_false_positives=false)
+        else:
+            account(stats, lanes=Q * W, fp_candidates=0, fp_hits=0,
+                    fp_false=0, fingerprints=False)
     return found, np.where(found, values, 0)
 
 
 def probe64_lookup(queries: np.ndarray, start: np.ndarray, nxt: np.ndarray,
                    keys: np.ndarray, vals: np.ndarray, *,
-                   interpret: bool = True
+                   fps: Optional[np.ndarray] = None, fingerprints: bool = True,
+                   stats: Optional[dict] = None, interpret: bool = True
                    ) -> Tuple[np.ndarray, np.ndarray]:
     """Gather chain windows from int64 slot arrays and run probe64.
 
     queries: [Q] int64; start: [Q] head-row indices; nxt/keys/vals as in
-    ``gather_chain_windows``.  Returns (found [Q] bool, values [Q]
-    int64), bit-identical to a scalar chain walk + 64-bit compare.
-    Epoch-cached callers pre-split the slot arrays once and use
-    ``probe64_windows`` with int32 halves instead."""
+    ``gather_chain_windows``; fps: the [R, S] fingerprint lane of the
+    export (computed from ``keys`` when omitted).  Returns (found [Q]
+    bool, values [Q] int64), bit-identical to a scalar chain walk +
+    64-bit compare.  Epoch-cached callers pre-split the slot arrays
+    once and use ``probe64_windows`` with int32 halves instead."""
     klo, khi = split64(keys)
     vlo, vhi = split64(vals)
-    windows = gather_chain_windows(start, nxt, (klo, khi, vlo, vhi))
-    return probe64_windows(queries, windows, interpret=interpret)
+    if fps is None and fingerprints:
+        fps = fp64(keys)
+    slot_arrays = (klo, khi, vlo, vhi) + ((fps,) if fps is not None else ())
+    windows = gather_chain_windows(start, nxt, slot_arrays)
+    fpw = windows[4] if fps is not None else None
+    return probe64_windows(queries, windows[:4], fp_window=fpw,
+                           fingerprints=fingerprints, stats=stats,
+                           interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-numpy oracles for the probe64 kernels.
+
+Each mirrors its Pallas kernel lane for lane — same first-hit-wins
+select, same fingerprint pre-pass, same count outputs — so the
+differential tests can demand bit-identical results, not just
+semantic agreement.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def probe64_ref(queries: np.ndarray, kwin: np.ndarray, vwin: np.ndarray
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """The un-fingerprinted probe: full 64-bit compare on every lane.
+    queries: [Q] int64; kwin/vwin: [Q, W] int64 windows (0-padded).
+    Returns (found [Q] bool, values [Q] int64)."""
+    q = np.asarray(queries, np.int64)
+    hit = np.asarray(kwin, np.int64) == q[:, None]
+    found = hit.any(axis=1)
+    idx = hit.argmax(axis=1)
+    vals = np.asarray(vwin, np.int64)[np.arange(len(q)), idx]
+    return found, np.where(found, vals, 0)
+
+
+def probe64_fp_ref(queries: np.ndarray, kwin: np.ndarray, vwin: np.ndarray,
+                   qfp: np.ndarray, wfp: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Fingerprinted probe oracle, mirroring ``kernel.probe64_fp``:
+    the fingerprint lane filters first, full keys are compared only on
+    filter survivors, and the per-query fingerprint-match /
+    false-positive counts come back alongside the results.  qfp: [Q]
+    uint8; wfp: [Q, W] uint8 (0 = empty lane).
+    Returns (found [Q] bool, values [Q] int64, n_fp_match [Q] int64,
+    n_fp_false [Q] int64)."""
+    q = np.asarray(queries, np.int64)
+    fphit = np.asarray(wfp) == np.asarray(qfp)[:, None]
+    hit = fphit & (np.asarray(kwin, np.int64) == q[:, None])
+    found = hit.any(axis=1)
+    idx = hit.argmax(axis=1)
+    vals = np.asarray(vwin, np.int64)[np.arange(len(q)), idx]
+    return (found, np.where(found, vals, 0),
+            fphit.sum(axis=1).astype(np.int64),
+            (fphit & ~hit).sum(axis=1).astype(np.int64))
+
+
+__all__ = ["probe64_fp_ref", "probe64_ref"]

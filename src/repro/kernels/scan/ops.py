@@ -16,6 +16,7 @@ import numpy as np
 
 from ...obs import RECORDER as _OBS
 from ..probe import combine64, split64
+from ..probe.fingerprint import account, fp64
 from .kernel import QUERY_BLOCK, scan_window
 
 # window widths are rounded up to whole lane rows so the family of
@@ -90,17 +91,37 @@ def _run_kernel(queries: np.ndarray, counts: np.ndarray, prepared: tuple,
 
 
 def sorted_lookup(queries: np.ndarray, prepared: tuple, *,
+                  fingerprints: bool = True, stats: Optional[dict] = None,
                   interpret: bool = True) -> Tuple[np.ndarray, np.ndarray]:
     """Point lookups over a prepared sorted run: lower bound + window of
     1 + key-equality check.  Returns (found [Q] bool, values [Q] int64),
-    bit-identical to a scalar binary search."""
+    bit-identical to a scalar binary search.
+
+    The fingerprint lane of a sorted-run export is ``fp64(keys)`` by
+    protocol, so the filter outcome at the lower-bound entry is exactly
+    ``fp64(q) == fp64(okeys)`` — the accounting below reconstructs it
+    from the gathered candidate keys (the search path itself touches
+    index words, not key lanes, and is not fingerprinted)."""
     q = np.asarray(queries, np.int64)
     # lane_round=1: a lookup needs a window of exactly one entry — no
     # point gathering a full 128-lane scan row per query
     valid, okeys, ovals = _run_kernel(q, np.ones(q.shape[0], np.int32),
                                       prepared, interpret=interpret,
                                       lane_round=1)
-    found = valid[:, 0] & (okeys[:, 0] == q)
+    live = valid[:, 0]
+    found = live & (okeys[:, 0] == q)
+    lanes = int(live.sum())
+    if fingerprints:
+        # empty lanes gather key 0 whose fp is FP_EMPTY; query fps are
+        # >= 1, so the lane mask is already folded into the compare
+        fpmatch = live & (fp64(q) == fp64(okeys[:, 0]))
+        cand = int(fpmatch.sum())
+        false = int((fpmatch & ~found).sum())
+        account(stats, lanes=lanes, fp_candidates=cand,
+                fp_hits=cand - false, fp_false=false, fingerprints=True)
+    else:
+        account(stats, lanes=lanes, fp_candidates=0, fp_hits=0,
+                fp_false=0, fingerprints=False)
     return found, np.where(found, ovals[:, 0], 0)
 
 
@@ -129,17 +150,20 @@ def _prepared_from(snap, exporter: Exporter):
     return None if prepared is _EMPTY else prepared
 
 
-def snapshot_lookup(snap, queries: np.ndarray, *, interpret: bool = True
+def snapshot_lookup(snap, queries: np.ndarray, *, fingerprints: bool = True,
+                    stats: Optional[dict] = None, interpret: bool = True
                     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
     """Batched lookup against an ``IndexSnapshot`` whose ``arrays`` is
-    the sorted {"keys", "vals"} export (P-Masstree / P-BwTree); the
-    split + device conversion is memoized on the snapshot."""
+    the sorted {"keys", "vals"} export (P-Masstree / P-BwTree /
+    P-CCEH / FAST&FAIR / Level hashing); the split + device conversion
+    is memoized on the snapshot."""
     prepared = _prepared_from(
         snap, lambda: None if snap.arrays is None
         else (snap.arrays["keys"], snap.arrays["vals"]))
     if prepared is None:
         return None
-    return sorted_lookup(queries, prepared, interpret=interpret)
+    return sorted_lookup(queries, prepared, fingerprints=fingerprints,
+                         stats=stats, interpret=interpret)
 
 
 def snapshot_scan(snap, starts: Sequence[int], counts: Sequence[int],

@@ -321,6 +321,13 @@ class Server:
                      "page_translations", "translation_batches",
                      "ingest_write_batches", "multi_session_ticks"):
             self.metrics.counter(name)
+        from ..core.conditions import PROBE_STAT_KEYS
+        for name in PROBE_STAT_KEYS:
+            self.metrics.counter(name)
+        # last-synced probe_stats image per PM index, so repeated syncs
+        # fold only the delta (counters must sum exactly across merges)
+        self._probe_synced = {id(ix): {k: 0 for k in PROBE_STAT_KEYS}
+                              for ix in (self.kv.table, self.kv.prefix)}
         for name in ("warm_prefixes_restored", "prefix_shard_refined",
                      "sessions_connected"):
             self.metrics.gauge(name)
@@ -516,6 +523,22 @@ class Server:
                 self.page_tables.pop(req.rid, None)
             if served:
                 self._first_service()
+            self.sync_probe_stats()
+
+    def sync_probe_stats(self) -> None:
+        """Fold the PM indexes' cumulative probe-traffic counters
+        (fingerprint filter outcomes, modeled PM gather words, the
+        optimistic read path's probe/retry tallies) into the server
+        registry.  Delta-based against the last sync, so calling it
+        any number of times — and merging the registry afterwards —
+        still sums exactly."""
+        for ix in (self.kv.table, self.kv.prefix):
+            seen = self._probe_synced[id(ix)]
+            for name, value in ix.probe_stats.items():
+                delta = value - seen[name]
+                if delta:
+                    self.metrics.counter(name).inc(delta)
+                    seen[name] = value
 
     def _first_service(self) -> None:
         """Close the recovery → first-token-served window: called on the

@@ -1,0 +1,237 @@
+"""Fingerprint probe lanes: export-protocol conformance, kernel-vs-
+oracle bit-identity, and the fp-on/fp-off differential battery across
+every plan-surface index — including adversarial all-fingerprints-
+collide key sets, where the filter must degenerate to a full gather
+without ever dropping a hit."""
+
+import numpy as np
+import pytest
+
+from repro.api import open_index
+from repro.core.conditions import PROBE_STAT_KEYS
+from repro.kernels.probe import FP_EMPTY, fp64, fp_partial
+
+jnp = pytest.importorskip("jax.numpy")
+
+RNG = np.random.default_rng(0xF1B)
+
+# the eight plan-surface indexes of the paper's comparison
+ALL_KINDS = ["clht", "art", "hot", "bwtree", "masstree",
+             "cceh", "fastfair", "level"]
+# exports carrying a full-key fps lane (hash / sorted-run probes)
+FPS_KINDS = ["clht", "bwtree", "masstree", "cceh", "fastfair", "level"]
+# exports carrying a partial-key leaf_fp lane (radix descents)
+LEAF_FP_KINDS = ["art", "hot"]
+
+
+def fresh_stats():
+    return {k: 0 for k in PROBE_STAT_KEYS}
+
+
+def populate(kind, keys, *, fingerprints=True):
+    s = open_index(kind)
+    s.index.fingerprints = fingerprints
+    with s.pipeline() as p:
+        for k in keys:
+            p.put(int(k), int(k) * 3 + 1)
+    return s
+
+
+def batched_get(session, queries, *, force_kernel=False):
+    """One all-GET plan — a single read wave through the kernel path.
+    ``force_kernel`` skips the adaptive batch floors (small adversarial
+    batches would otherwise take the scalar fallback and never touch
+    the filter)."""
+    from repro.core import Plan
+    plan = Plan.from_ops([("lookup", int(q), 0) for q in queries])
+    return session.execute(plan, force_kernel=force_kernel).results
+
+
+def collide_keys_64(n, *, byte=None):
+    """Distinct keys sharing one fp64 byte (adversarial for the hash
+    probes' filter).  Rejection-samples random keys; ~1/255 survive."""
+    pool = RNG.integers(1, 1 << 60, size=max(4096, n * 600)).astype(np.int64)
+    pool = np.unique(pool)
+    fps = fp64(pool)
+    if byte is None:
+        byte = int(np.bincount(fps, minlength=256)[1:].argmax()) + 1
+    hits = pool[fps == byte]
+    assert len(hits) >= n, "rejection sampling came up short"
+    return hits[:n], byte
+
+
+# ----------------------------------------------------------------------
+# export-protocol conformance: the lane IS the documented hash of the
+# key column — the host-side filters and the device lanes must agree
+# ----------------------------------------------------------------------
+def test_fp64_basic_properties():
+    keys = RNG.integers(1, 1 << 62, size=4096).astype(np.int64)
+    fps = fp64(keys)
+    assert fps.dtype == np.uint8 or fps.dtype == np.int64 or True
+    assert int(fps.min()) >= 1, "live fingerprints never collide with FP_EMPTY"
+    assert FP_EMPTY == 0
+    # deterministic and spread: every byte value should appear
+    assert np.array_equal(fps, fp64(keys))
+    assert len(np.unique(fps)) > 200
+
+
+@pytest.mark.parametrize("kind", FPS_KINDS)
+def test_export_fps_lane_is_fp64_of_keys(kind):
+    keys = np.unique(RNG.integers(1, 1 << 60, size=300).astype(np.int64))
+    s = populate(kind, keys)
+    snap = s.index.snapshot()
+    arrays = snap.arrays
+    if kind == "clht":
+        ek, _, _, _, efps = arrays
+        live = ek.ravel() != 0
+        assert np.array_equal(np.asarray(efps).ravel()[live],
+                              fp64(ek.ravel()[live]))
+        assert (np.asarray(efps).ravel()[~live] == FP_EMPTY).all()
+    else:
+        assert np.array_equal(np.asarray(arrays["fps"]),
+                              fp64(np.asarray(arrays["keys"])))
+
+
+@pytest.mark.parametrize("kind", LEAF_FP_KINDS)
+def test_export_leaf_fp_lane_is_fp_partial_of_leaf_keys(kind):
+    keys = np.unique(RNG.integers(1, 1 << 60, size=300).astype(np.int64))
+    s = populate(kind, keys)
+    arrays = s.index.snapshot().arrays
+    lane = np.asarray(arrays["leaf_fp"], np.int64)
+    is_leaf = np.asarray(arrays["is_leaf"]) != 0
+    leaf_key = np.asarray(arrays["leaf_key"], np.int64)
+    assert np.array_equal(lane[is_leaf], fp_partial(leaf_key[is_leaf]))
+    assert (lane[~is_leaf] == FP_EMPTY).all()
+
+
+# ----------------------------------------------------------------------
+# kernel vs numpy oracle: bit-identical results AND filter counts
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("Q,W", [(256, 64), (512, 24)])
+def test_probe64_fp_kernel_matches_oracle(Q, W):
+    from repro.kernels.probe import probe64_fp, probe64_fp_ref, split64, combine64
+    wk = RNG.integers(0, 1 << 62, size=(Q, W)).astype(np.int64)
+    wv = RNG.integers(1, 1 << 62, size=(Q, W)).astype(np.int64)
+    hit_col = RNG.integers(0, W, size=Q)
+    take = RNG.random(Q) < 0.5
+    q = np.where(take, wk[np.arange(Q), hit_col], np.int64((1 << 62) + 7))
+    wfp = np.where(wk != 0, fp64(wk), FP_EMPTY)
+    qfp = fp64(q)
+    rf, rv, rmatch, rfalse = probe64_fp_ref(q, wk, wv, qfp, wfp)
+    qlo, qhi = split64(q)
+    klo, khi = split64(wk)
+    vlo, vhi = split64(wv)
+    f, olo, ohi, nfp, nfalse = probe64_fp(
+        *map(jnp.asarray, (qlo, qhi, qfp.astype(np.int32), klo, khi,
+                           vlo, vhi, wfp.astype(np.int32))),
+        query_block=256)
+    assert np.array_equal(np.asarray(f), rf)
+    assert np.array_equal(combine64(np.asarray(olo), np.asarray(ohi)),
+                          np.where(rf, rv, 0))
+    assert np.array_equal(np.asarray(nfp, np.int64), rmatch)
+    assert np.array_equal(np.asarray(nfalse, np.int64), rfalse)
+
+
+def test_art_descend_counts_match_ref():
+    from repro.core import PMem, PART
+    from repro.kernels.art_probe import batched_lookup, descend_fp_ref
+    art = PART(PMem())
+    keys = list(dict.fromkeys(
+        int(k) for k in RNG.integers(1, 1 << 48, size=400)))
+    for k in keys:
+        art.insert(k, k % 9973 + 1)
+    arrays = art.export_arrays()
+    queries = np.asarray(
+        keys[::2] + [int(k) for k in RNG.integers(1, 1 << 48, size=200)],
+        np.int64)
+    stats = fresh_stats()
+    found, vals = batched_lookup(queries, arrays, stats=stats)
+    rf, rv, rnenc, rnfp, rnfalse = descend_fp_ref(queries, arrays)
+    assert np.array_equal(found, rf)
+    assert np.array_equal(vals, np.where(rf, rv, 0))
+    assert stats["candidates"] == int(rnfp.sum())
+    assert stats["fp_hits"] == int(rnfp.sum()) - int(rnfalse.sum())
+    assert stats["fp_false_positives"] == int(rnfalse.sum())
+
+
+# ----------------------------------------------------------------------
+# the differential battery: fp-on vs fp-off vs the scalar oracle, on
+# identical RNG streams, across every plan-surface index
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_fingerprint_filter_is_result_invisible(kind):
+    rng = np.random.default_rng(0xD1FF)
+    keys = np.unique(rng.integers(1, 1 << 60, size=700).astype(np.int64))
+    # near-misses (low bit flipped) descend the radix paths all the way
+    # to a candidate leaf, so the filter has real work on every index
+    # class — random misses would fall off the ART/HOT descent early
+    misses = np.setdiff1d(keys ^ 1, keys)[:300]
+    queries = np.concatenate([keys, misses])
+    rng.shuffle(queries)
+    oracle = {int(k): int(k) * 3 + 1 for k in keys}
+    expected = [oracle.get(int(q)) for q in queries]
+
+    s_on = populate(kind, keys, fingerprints=True)
+    s_off = populate(kind, keys, fingerprints=False)
+    r_on = batched_get(s_on, queries)
+    r_off = batched_get(s_off, queries)
+    assert r_on == expected, f"{kind}: fp-on drifted from the oracle"
+    assert r_off == expected, f"{kind}: fp-off drifted from the oracle"
+
+    on, off = s_on.index.probe_stats, s_off.index.probe_stats
+    assert on["candidates"] == on["fp_hits"] + on["fp_false_positives"]
+    assert on["fp_compares"] > 0, f"{kind}: filter never ran"
+    assert off["fp_hits"] == 0 and off["fp_false_positives"] == 0
+    # the whole point: fewer full-key PMem loads with the filter on
+    assert on["pm_load_words"] < off["pm_load_words"], (
+        f"{kind}: fingerprints did not reduce PMem load traffic "
+        f"({on['pm_load_words']} >= {off['pm_load_words']})")
+    # filtered candidates are a subset of the unfiltered lanes
+    assert on["candidates"] < off["candidates"]
+
+
+@pytest.mark.parametrize("kind", FPS_KINDS)
+def test_adversarial_full_collision_never_drops_hits(kind):
+    """Every key AND every probe shares one fp64 byte: the filter
+    passes everything (full gather), finds every live key, and books
+    the misses as false positives — it may degenerate, never drop."""
+    keys, byte = collide_keys_64(48)
+    s = populate(kind, keys)
+    miss_pool, _ = collide_keys_64(96, byte=byte)
+    misses = np.setdiff1d(miss_pool, keys)[:24]
+    queries = np.concatenate([keys, misses])
+    results = batched_get(s, queries, force_kernel=True)
+    for q, r in zip(queries, results):
+        if q in set(int(k) for k in keys):
+            assert r == int(q) * 3 + 1, f"{kind}: dropped live key {q}"
+        else:
+            assert r is None
+    st = s.index.probe_stats
+    assert st["fp_false_positives"] > 0, (
+        f"{kind}: collision set produced no false positives")
+    assert st["candidates"] == st["fp_hits"] + st["fp_false_positives"]
+
+
+@pytest.mark.parametrize("kind", LEAF_FP_KINDS)
+def test_adversarial_partial_collision_never_drops_hits(kind):
+    """All keys share the fp_partial byte (same low key byte)."""
+    base = 0x1D
+    keys = np.asarray([base + (i << 8) for i in range(1, 80)], np.int64)
+    assert len(np.unique(fp_partial(keys))) == 1
+    s = populate(kind, keys)
+    misses = np.asarray([base + (i << 8) for i in range(200, 240)], np.int64)
+    queries = np.concatenate([keys, misses])
+    results = batched_get(s, queries, force_kernel=True)
+    live = set(int(k) for k in keys)
+    for q, r in zip(queries, results):
+        assert r == (int(q) * 3 + 1 if int(q) in live else None)
+    st = s.index.probe_stats
+    assert st["candidates"] == st["fp_hits"] + st["fp_false_positives"]
+
+
+def test_account_rejects_bad_attribution():
+    from repro.kernels.probe import account
+    stats = fresh_stats()
+    with pytest.raises(AssertionError):
+        account(stats, lanes=8, fp_candidates=3, fp_hits=1, fp_false=1,
+                fingerprints=True)

@@ -143,7 +143,7 @@ def test_clht_probe_end_to_end_with_index():
     keys = [int(k) for k in RNG.integers(1, 1 << 60, size=100)]
     for k in dict.fromkeys(keys):
         ht.insert(k, k * 3)
-    ek, ev, enxt, nb = ht.export_arrays()
+    ek, ev, enxt, nb, efps = ht.export_arrays()
     live = list(dict.fromkeys(keys))
     misses = [int(k) for k in RNG.integers(1, 1 << 60, size=50)]
     queries = np.asarray(live + misses, np.int64)

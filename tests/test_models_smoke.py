@@ -84,6 +84,10 @@ def test_decode_matches_forward(arch):
     if cfg.encdec is not None:
         enc = model._encode(params, batch["frames"].astype(jnp.float32))
     if cfg.vision is not None:
+        # skip triage (perennial tier-1 skip, intentional): vision
+        # configs decode from an encoder-conditioned prefill, which the
+        # prefill test above already drives end to end; re-running the
+        # per-token decode loop here would only repeat it at 10x cost
         pytest.skip("decode after vision prefill covered via prefill test")
 
     caches = model.init_caches(B, T, dtype=jnp.float32)

@@ -71,6 +71,12 @@ def test_cell_costs_useful_ratio_sane():
                                   "runs", "dryrun",
                                   "codeqwen1.5-7b__train_4k__16x16.json"))
     if not recs:
+        # skip triage (perennial tier-1 skip, intentional): the
+        # assertion needs a runs/dryrun artifact that only a full
+        # training dry run produces; checked-out trees don't carry it.
+        # The roofline math itself is covered unconditionally by the
+        # unit tests above — only this end-to-end cross-check gates on
+        # the artifact.
         pytest.skip("dry-run artifacts not present")
     r = json.load(open(recs[0]))
     assert 0.85 < r["roofline"]["useful_flops_ratio"] < 1.15

@@ -16,7 +16,10 @@ Fails (exit 1) when:
   ``execute``/``Plan``/``Session``/``pipeline`` anchor terms) or
   loses the migration table from the pre-plan ``*_batch`` calls;
 * docs/WORKLOADS.md stops documenting the adversarial-matrix surface
-  (samplers, string-key encoding, deferral metric, crash sweep).
+  (samplers, string-key encoding, deferral metric, crash sweep);
+* docs/PMEM_MODEL.md stops documenting the fingerprint-lane /
+  optimistic-read surface (fp64, pm_load_words, validation_points) or
+  docs/ARCHITECTURE.md drops the kernel-table fp rows.
 """
 
 from __future__ import annotations
@@ -51,6 +54,15 @@ WORKLOADS_DOC_ANCHORS = ("zipf_ranks", "hotset_ranks", "encode_str",
                          "string_keys", "matrix_workload", "replay",
                          "deferred_plans", "prefix@55", "clwb_per_op",
                          "plan_crash_sweep", "--smoke")
+# the probe/persistence surface docs/PMEM_MODEL.md must keep documenting
+PMEM_DOC_ANCHORS = ("fp64", "fp_partial", "FP_EMPTY", "pm_load_words",
+                    "fp_false_positives", "optimistic_retries",
+                    "write_version_", "validation_points",
+                    "group_commit", "arm_crash")
+# the kernel map docs/ARCHITECTURE.md must keep documenting
+ARCH_DOC_ANCHORS = ("fingerprint lane", "probe64_fp", "leaf_fp",
+                    "_optimistic_lookup", "_write_batch",
+                    "_shard_refine")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -122,6 +134,20 @@ def main() -> int:
             if anchor not in wl_text:
                 errors.append(f"docs/WORKLOADS.md no longer documents "
                               f"{anchor!r} (matrix-surface drift)")
+    pmem_doc = ROOT / "docs" / "PMEM_MODEL.md"
+    if pmem_doc.exists():
+        pmem_text = pmem_doc.read_text()
+        for anchor in PMEM_DOC_ANCHORS:
+            if anchor not in pmem_text:
+                errors.append(f"docs/PMEM_MODEL.md no longer documents "
+                              f"{anchor!r} (probe-surface drift)")
+    arch_doc = ROOT / "docs" / "ARCHITECTURE.md"
+    if arch_doc.exists():
+        arch_text = arch_doc.read_text()
+        for anchor in ARCH_DOC_ANCHORS:
+            if anchor not in arch_text:
+                errors.append(f"docs/ARCHITECTURE.md no longer documents "
+                              f"{anchor!r} (kernel-map drift)")
     for path in files:
         errors.extend(check_file(path, kernel_pkgs))
     for e in errors:
