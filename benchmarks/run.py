@@ -6,8 +6,13 @@
                   (docs/WORKLOADS.md)
   counters        Table 4 / Fig 4c-d (clwb, fence, lines-touched)
   crash_recovery  §7.5 (targeted crash states; bug re-finding)
+  chaos           instant-recovery SLOs: powerfail mid-plan, time to
+                  first served request vs a DRAM-rebuild baseline
+                  (docs/RECOVERY.md)
   loc_report      Table 1 (conversion effort)
   roofline_report framework §Roofline tables from the dry-run
+
+``--only`` takes a comma-separated subset of section names.
 
 Prints a ``name,value,derived`` CSV summary at the end.
 """
@@ -21,7 +26,7 @@ import subprocess
 import sys
 import time
 
-from . import (counters, crash_recovery, loc_report, matrix,
+from . import (chaos, counters, crash_recovery, loc_report, matrix,
                roofline_report, ycsb)
 
 
@@ -41,7 +46,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller workloads (CI-speed)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="run only these sections (comma-separated)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the summary rows as JSON "
                          "(BENCH_ycsb.json-style), accumulating the "
@@ -83,12 +89,17 @@ def main() -> None:
         "crash_recovery": lambda: crash_recovery.run(
             n_keys=40 if args.quick else 60,
             max_states=1000 if args.quick else 3000),
+        "chaos": lambda: chaos.run(n_run, crash_samples=3),
         "loc_report": loc_report.run,
         "roofline_report": roofline_report.run,
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(sections)
+        assert not unknown, f"unknown --only sections: {sorted(unknown)}"
     all_rows = []
     for name, fn in sections.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         print(f"\n=== {name} " + "=" * (68 - len(name)))
         t0 = time.perf_counter()
@@ -138,6 +149,12 @@ def main() -> None:
         scaling = {r["name"].split("/", 1)[1].split(".", 1)[0]: r["value"]
                    for r in flat if r["name"].startswith("ycsb_sharded/")
                    and "_scaling_" in r["name"]}
+        # instant-recovery headline: median speedup over the DRAM-
+        # rebuild baseline across the recovery/* rows (0.0 without the
+        # chaos section)
+        rec = sorted(r["value"] for r in flat
+                     if r["name"].startswith("recovery/")
+                     and r["name"].endswith(".instant_recovery_speedup"))
         record = {
             "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "commit": _git_commit(),
@@ -147,6 +164,7 @@ def main() -> None:
             "shards": args.shards,
             "streams": args.streams,
             "sharded_scaling": scaling,
+            "recovery_speedup_median": rec[len(rec) // 2] if rec else 0.0,
             "plan_waves_total": total_waves,
             "plan_mean_wave_width": (total_wave_ops / total_waves
                                      if total_waves else 0.0),

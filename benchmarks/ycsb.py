@@ -12,6 +12,8 @@ from __future__ import annotations
 import time
 from typing import Callable, Dict, List
 
+import numpy as np
+
 from repro import obs
 from repro.core import PART, PBwTree, PCLHT, PHOT, PMasstree, PMem, Plan
 from repro.core.baselines import CCEH, FastFair, LevelHashing
@@ -333,6 +335,98 @@ def bench_batched(n_load: int, n_run: int, workloads=("B", "C")):
 def _chunk_plans(ops, chunk: int):
     return [Plan.from_ops(ops[i:i + chunk])
             for i in range(0, len(ops), chunk)]
+
+
+def _merge_plans(plans):
+    arrs = [p.arrays() for p in plans]
+    return Plan.from_arrays(np.concatenate([a[0] for a in arrs]),
+                            np.concatenate([a[1] for a in arrs]),
+                            np.concatenate([a[2] for a in arrs]))
+
+
+def bench_pipelined(n_load: int, n_run: int, workloads=("C", "D"),
+                    chunk: int = 512, coalesce: int = 8, reps: int = 3):
+    """Blocking vs double-buffered pipelined plan execution
+    (``serving.PlanPipeline``) on the serving-shaped mixes: YCSB-C
+    (read-only steady decode) and YCSB-D (read-latest with inserts —
+    the mix whose epoch bumps exercise the deferred re-export path).
+
+    The client submits chunk-sized plans back-to-back, as a saturated
+    server would.  The blocking side builds and executes each plan
+    inline; the pipelined side builds on the submit thread while the
+    worker executes, and — the structural win — coalesces plans that
+    queued behind a busy worker into one merged dispatch, amortizing
+    wave scheduling and kernel launches the blocking path pays per
+    plan.  FIFO concatenation preserves per-key op order, so an
+    untimed warm pass asserts the pipelined results bit-identical to
+    the blocking pass before anything is timed.
+
+    Timing honesty: merged-plan widths depend on how many plans queue,
+    so the warm phase also executes merged plans of every coalesce
+    bucket (2/4/8 chunks — query pads are pow2 below ``QUERY_BLOCK``)
+    to keep jit compiles out of the timed region, and both sides
+    report the best of ``reps`` passes (re-running the idempotent op
+    stream) to shed residual scheduler noise."""
+    from repro.serving import AsyncExporter, PlanPipeline
+    rows = []
+    targets = [("P-CLHT", lambda p: PCLHT(p, n_buckets=512)),
+               ("P-ART", PART)]
+    n_ops = 2 * n_run  # saturated submit stream, as in bench_batched
+    print(f"# pipelined plan execution — blocking vs PlanPipeline "
+          f"(depth=8, coalesce={coalesce}), Kops/s ({n_ops} run ops)")
+    for name, factory in targets:
+        out: Dict[str, float] = {}
+        for wl_name in workloads:
+            wl = generate(wl_name, n_load, n_ops, seed=7)
+            plans = _chunk_plans(wl.run_ops, chunk)
+            idx_b = factory(PMem())
+            run_workload(idx_b, wl, phase="load", batch_lookups=True)
+            base = [idx_b.execute(p, force_kernel=True).results
+                    for p in plans]  # warm + reference results
+            t_b = None
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for p in plans:
+                    idx_b.execute(p, force_kernel=True)
+                dt = time.perf_counter() - t0
+                t_b = dt if t_b is None or dt < t_b else t_b
+            idx_p = factory(PMem())
+            run_workload(idx_p, wl, phase="load", batch_lookups=True)
+            exporter = AsyncExporter()
+            with PlanPipeline(idx_p, depth=8, coalesce=coalesce,
+                              exporter=exporter,
+                              force_kernel=True) as pipe:
+                warm = [t.wait().results
+                        for t in [pipe.submit(p) for p in plans]]
+                assert warm == base, (
+                    f"{name}/{wl_name}: pipelined results diverged "
+                    f"from the blocking path")
+                for g in (2, 4, 8):  # compile every coalesce bucket
+                    pipe.submit(_merge_plans(plans[:g]))
+                pipe.drain()
+                t_p = None
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    for p in plans:
+                        pipe.submit(p)
+                    pipe.drain()
+                    dt = time.perf_counter() - t0
+                    t_p = dt if t_p is None or dt < t_p else t_p
+            out[f"{wl_name}_blocking"] = n_ops / t_b / 1e3
+            out[f"{wl_name}_pipelined"] = n_ops / t_p / 1e3
+            out[f"{wl_name}_speedup"] = t_b / t_p
+            out[f"{wl_name}_groups"] = float(pipe.stats["groups"])
+            out[f"{wl_name}_coalesced_plans"] = float(
+                pipe.stats["coalesced_plans"])
+            out[f"{wl_name}_stalls"] = float(pipe.stats["stalls"])
+            out[f"{wl_name}_exports_published"] = float(
+                exporter.stats["published"])
+        rows.append((f"ycsb_pipelined/{name}", out))
+        print(f"  {name:12s} " + "  ".join(
+            f"{w}: {out[f'{w}_blocking']:7.1f} -> "
+            f"{out[f'{w}_pipelined']:8.1f} ({out[f'{w}_speedup']:4.1f}x, "
+            f"{out[f'{w}_groups']:.0f} groups)" for w in workloads))
+    return rows
 
 
 # fingerprint probe-lane A/B: one target per probe family — bucket
@@ -719,6 +813,7 @@ def run(n_load: int = 20000, n_run: int = 20000, *, woart: bool = True,
         rows.extend(bench_batched_scan(n_load, n_run))
         rows.extend(bench_batched_write(n_load, n_run))
         rows.extend(bench_mixed_plan(n_load, n_run))
+        rows.extend(bench_pipelined(n_load, n_run))
     if shards > 1:
         # the sweep runs at paper-meaningful scale (n >= 64K keys) even
         # in --quick mode: shard scaling at toy sizes only measures

@@ -256,16 +256,37 @@ class RecipeIndex:
         lookups.  Index-specific layout; see PCLHT/PART."""
         raise NotImplementedError(f"{type(self).__name__} has no array export")
 
+    def build_export(self) -> IndexSnapshot:
+        """Build — but do not install — a point-in-time export.
+
+        The deferred re-export path (``serving.pipeline.AsyncExporter``)
+        splits ``snapshot()`` in two so the expensive array walk (and
+        fingerprint-lane rebuild) can run off the read critical path:
+        ``build_export`` captures the epoch key *before* walking (the
+        export performs loads but no stores, so the pre-walk key is the
+        right validity tag), and ``publish_export`` installs the result
+        only if the index hasn't moved since."""
+        key = self._epoch_key()
+        return IndexSnapshot(epoch=key, arrays=self.export_arrays(),
+                             shard_epochs=self._effective_shard_epochs())
+
+    def publish_export(self, snap: IndexSnapshot) -> bool:
+        """Epoch-guarded publication of a built export: install ``snap``
+        as the serving snapshot iff the index is still at the epoch the
+        export was built under.  A stale build (a write or crash landed
+        in between) is rejected whole — a read wave can therefore never
+        observe a half-published or torn export; it either sees the old
+        snapshot or the complete new one.  Returns True on install."""
+        if snap.epoch != self._epoch_key():
+            return False
+        self._snapshot = snap
+        return True
+
     def snapshot(self) -> IndexSnapshot:
         """Return a point-in-time export, rebuilding only on epoch change."""
         key = self._epoch_key()
         if self._snapshot is None or self._snapshot.epoch != key:
-            arrays = self.export_arrays()
-            # exporting may count loads but performs no stores, so the
-            # key computed *before* the export is still the right one
-            self._snapshot = IndexSnapshot(
-                epoch=key, arrays=arrays,
-                shard_epochs=self._effective_shard_epochs())
+            self._snapshot = self.build_export()
         return self._snapshot
 
     # -- sharded batched write path (partition + group commit) ------------

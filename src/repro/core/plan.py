@@ -93,13 +93,14 @@ class Plan:
     * SCAN   → ``List[Tuple[key, value]]``.
     """
 
-    __slots__ = ("_kinds", "_keys", "_aux", "_arrays")
+    __slots__ = ("_kinds", "_keys", "_aux", "_arrays", "_waves")
 
     def __init__(self) -> None:
         self._kinds: List[int] = []
         self._keys: List[int] = []
         self._aux: List[int] = []
         self._arrays: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        self._waves: Optional[List["Wave"]] = None
 
     # -- builders ---------------------------------------------------------
     def _append(self, kind: int, key: int, aux: int) -> int:
@@ -111,6 +112,7 @@ class Plan:
             self._keys = keys.tolist()
             self._aux = aux_arr.tolist()
         self._arrays = None
+        self._waves = None
         self._kinds.append(kind)
         self._keys.append(key)
         self._aux.append(aux)
@@ -180,6 +182,18 @@ class Plan:
         kinds, keys, aux = self.arrays()
         for k, key, a in zip(kinds.tolist(), keys.tolist(), aux.tolist()):
             yield Op(OpKind(k), key, a)
+
+    def waves(self) -> List["Wave"]:
+        """Conflict-free wave schedule of this plan (``schedule_waves``),
+        memoized.  Scheduling is a pure function of the op sequence and
+        never touches an index, so a pipelined builder may pre-compute
+        it off the executor's critical path (the build stage of
+        ``serving.pipeline.PlanPipeline``); ``run_plan`` picks the memo
+        up instead of re-scheduling."""
+        if self._waves is None:
+            kinds, keys, _ = self.arrays()
+            self._waves = schedule_waves(kinds, keys)
+        return self._waves
 
 
 @dataclasses.dataclass(frozen=True)
@@ -466,7 +480,7 @@ def run_plan(index, plan: Plan, *, force_kernel: bool = False,
             _run_single(index, int(kinds[0]), keys[0], aux[0], result)
             return result
         with _OBS.span("plan.schedule", n_ops=n):
-            waves = schedule_waves(kinds, keys)
+            waves = plan.waves()
         results = result.results
         # keys the plan's write waves have stored so far: a read wave
         # scheduled after a write wave may overlap it optimistically —

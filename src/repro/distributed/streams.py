@@ -100,6 +100,10 @@ class StreamDriver:
         if metrics is not None:
             for name in self.MIRRORED:
                 metrics.counter(f"stream_{name}")
+        # pipelined mode: merged plans submitted but not yet booked,
+        # FIFO — (PlanTicket, admitted, tick_no)
+        self._inflight: List[Tuple[Any, List[Tuple["ClientStream",
+                                                   StreamTicket]], int]] = []
 
     def _mirror(self, name: str, delta: int = 1) -> None:
         self.stats[name] += delta
@@ -110,11 +114,13 @@ class StreamDriver:
         return sum(len(s.queue) for s in self.streams)
 
     # -- one admission + execution tick -----------------------------------
-    def tick(self, **execute_kw) -> Optional[PlanResult]:
-        """Admit a conflict-free set of head-of-queue plans (round-
-        robin, rotating start), execute them as one merged plan, and
-        scatter results back to the tickets.  Returns the merged
-        ``PlanResult`` (None when every stream was idle)."""
+    def _admit_tick(self) -> Tuple[List[Tuple["ClientStream", StreamTicket]],
+                                   Optional[Plan]]:
+        """One admission round: pop a conflict-free set of head-of-queue
+        plans (round-robin, rotating start) and merge them into one
+        plan.  Shared verbatim by the blocking and pipelined ticks, so
+        both modes admit identical sequences — the deferral counter and
+        the per-stream program-order guarantee are mode-independent."""
         n_streams = len(self.streams)
         start = self.stats["ticks"] % max(1, n_streams)
         admitted: List[Tuple[ClientStream, StreamTicket]] = []
@@ -141,20 +147,20 @@ class StreamDriver:
             adm_keys.append(keys)
             adm_aux.append(aux)
         if not admitted:
-            return None
+            return [], None
         self._mirror("ticks")
         self._mirror("admitted_plans", len(admitted))
         self._mirror("multi_stream_ticks", int(len(admitted) > 1))
         merged = Plan.from_arrays(np.concatenate(adm_kinds),
                                   np.concatenate(adm_keys),
                                   np.concatenate(adm_aux))
-        n_ops = len(merged)
-        self._mirror("merged_ops", n_ops)
-        t0 = time.perf_counter_ns()
-        with _OBS.span("streams.tick", streams=len(admitted), ops=n_ops):
-            res = self.index.execute(
-                merged, collect_results=self.collect_results, **execute_kw)
-        wall = time.perf_counter_ns() - t0
+        self._mirror("merged_ops", len(merged))
+        return admitted, merged
+
+    def _scatter(self, admitted: List[Tuple["ClientStream", StreamTicket]],
+                 res: PlanResult, wall: int, tick_no: int) -> None:
+        """Book a completed merged plan: tally stats, record latency,
+        slice per-op results back to the stream tickets."""
         modeled = getattr(res, "critical_ns", 0) or wall
         self.stats["wall_ns"] += wall
         self.stats["critical_ns"] += modeled
@@ -162,14 +168,31 @@ class StreamDriver:
         self.stats["acked"] += res.acked
         self.stats["scanned"] += res.scanned
         if self.lat_hist is not None:
-            self.lat_hist.record_batch(modeled, n_ops)
+            self.lat_hist.record_batch(modeled, sum(
+                len(t.plan) for _, t in admitted))
         at = 0
         for stream, ticket in admitted:
             width = len(ticket.plan)
             if self.collect_results:
                 ticket.result = res.results[at:at + width]
-            ticket.tick = self.stats["ticks"]
+            ticket.tick = tick_no
             at += width
+
+    def tick(self, **execute_kw) -> Optional[PlanResult]:
+        """Admit a conflict-free set of head-of-queue plans (round-
+        robin, rotating start), execute them as one merged plan, and
+        scatter results back to the tickets.  Returns the merged
+        ``PlanResult`` (None when every stream was idle)."""
+        admitted, merged = self._admit_tick()
+        if not admitted:
+            return None
+        n_ops = len(merged)
+        t0 = time.perf_counter_ns()
+        with _OBS.span("streams.tick", streams=len(admitted), ops=n_ops):
+            res = self.index.execute(
+                merged, collect_results=self.collect_results, **execute_kw)
+        wall = time.perf_counter_ns() - t0
+        self._scatter(admitted, res, wall, self.stats["ticks"])
         return res
 
     def run(self, max_ticks: int = 100_000, **execute_kw) -> int:
@@ -180,6 +203,50 @@ class StreamDriver:
         while self.pending() and ticks < max_ticks:
             self.tick(**execute_kw)
             ticks += 1
+        return ticks
+
+    # -- pipelined execution ----------------------------------------------
+    def tick_pipelined(self, pipeline) -> bool:
+        """One admission round feeding a ``serving.pipeline
+        .PlanPipeline`` instead of executing inline: the merged plan is
+        submitted (build + wave schedule on this thread) and executes
+        FIFO on the pipeline worker while the next round admits.
+
+        Correctness is unchanged from the blocking tick: admission uses
+        the same cross-stream conflict rule (``_admit_tick``), so
+        conflicting streams still defer within a round — and *across*
+        rounds the pipeline's strict submission-order execution
+        serializes merged plans exactly as blocking ticks did.  A
+        stream's plan k+1 is never admitted before plan k was (heads
+        pop at admission), so per-stream program order survives into
+        the FIFO and results are bit-identical to ``tick()``."""
+        admitted, merged = self._admit_tick()
+        if not admitted:
+            return False
+        ticket = pipeline.submit(merged)
+        self._inflight.append((ticket, admitted, self.stats["ticks"]))
+        self.collect_ready()
+        return True
+
+    def collect_ready(self) -> int:
+        """Scatter every completed in-flight merged plan (FIFO prefix);
+        returns how many were booked."""
+        n = 0
+        while self._inflight and self._inflight[0][0].done:
+            ticket, admitted, tick_no = self._inflight.pop(0)
+            self._scatter(admitted, ticket.wait(), ticket.exec_ns, tick_no)
+            n += 1
+        return n
+
+    def run_pipelined(self, pipeline, max_ticks: int = 100_000) -> int:
+        """Pipelined dual of ``run``: admit until every stream drains,
+        then drain the pipeline and book the stragglers."""
+        ticks = 0
+        while self.pending() and ticks < max_ticks:
+            self.tick_pipelined(pipeline)
+            ticks += 1
+        pipeline.drain()
+        self.collect_ready()
         return ticks
 
 

@@ -54,6 +54,7 @@ import numpy as np
 from ..core import PART, PCLHT, PMem, Plan
 from ..obs import RECORDER as _OBS
 from ..obs import MetricsRegistry, MetricsView
+from .pipeline import AsyncExporter
 
 _M64 = (1 << 64) - 1
 
@@ -146,11 +147,18 @@ class PagedKVManager:
         or go scalar instead of re-exporting per admission."""
         if not pairs:
             return []
+        res = self.table.execute(self.translation_plan(pairs),
+                                 force_kernel=force_kernel).results
+        return [None if v is None else v - 1 for v in res]
+
+    def translation_plan(self, pairs: List[Tuple[int, int]]) -> Plan:
+        """The read plan resolving ``(seq_id, logical)`` translations —
+        split out so the pipelined tick can pre-build (and pre-schedule)
+        next tick's plan at the tail of the current one."""
         plan = Plan()
         for s, l in pairs:
             plan.get(self._bt_key(s, l))
-        res = self.table.execute(plan, force_kernel=force_kernel).results
-        return [None if v is None else v - 1 for v in res]
+        return plan
 
     def release_seq(self, seq_id: int, n_logical: int) -> None:
         """Tear down a sequence's translations with one batched probe
@@ -329,8 +337,16 @@ class Server:
         self._probe_synced = {id(ix): {k: 0 for k in PROBE_STAT_KEYS}
                               for ix in (self.kv.table, self.kv.prefix)}
         for name in ("warm_prefixes_restored", "prefix_shard_refined",
-                     "sessions_connected"):
+                     "sessions_connected", "pipeline_depth",
+                     "admit_queue_depth"):
             self.metrics.gauge(name)
+        for name in ("pipeline_prebuilt_plans", "pipeline_prebuilt_stale"):
+            self.metrics.counter(name)
+        # deferred snapshot re-exports (pipelined mode): registers the
+        # async_exports_* counters and the async_export_backlog gauge
+        self.exporter = AsyncExporter(metrics=self.metrics)
+        # next tick's pre-built translation plan: (pairs, plan)
+        self._prebuilt: Optional[Tuple[List[Tuple[int, int]], Plan]] = None
         self.stats = MetricsView(self.metrics)
         self._recover_t0: Optional[int] = None
         self._next_sid = 1  # 0 is the server's own default session
@@ -472,15 +488,36 @@ class Server:
             self.kv.prefix.shard_stats["refined_queries"])
         return admitted
 
-    def _resolve_page_tables(self) -> None:
+    def _translation_pairs(self) -> List[Tuple[int, int]]:
+        return [(req.rid, l) for req in self.running
+                for l in range(-(-req.pos // self.page_size))]
+
+    def _resolve_page_tables(self, *, pipelined: bool = False) -> None:
         """Translate every running sequence's logical pages in ONE
         batched probe of the block table (the decode hot path issues no
         scalar ``lookup`` at all).  The snapshot is epoch-cached inside
         the index, so steady decoding re-reads it for free and any
-        grant/admission automatically forces a re-export."""
-        pairs = [(req.rid, l) for req in self.running
-                 for l in range(-(-req.pos // self.page_size))]
-        phys = self.kv.lookup_pages_batch(pairs)
+        grant/admission automatically forces a re-export.
+
+        In pipelined mode the previous tick pre-built (and
+        pre-scheduled) this plan at its tail; when the running set is
+        unchanged the pre-built plan executes directly — identical ops,
+        identical results — and an admission that changed the set just
+        rebuilds (counted ``pipeline_prebuilt_stale``)."""
+        pairs = self._translation_pairs()
+        plan = None
+        if pipelined and self._prebuilt is not None:
+            built_pairs, built_plan = self._prebuilt
+            self._prebuilt = None
+            if built_pairs == pairs:
+                plan = built_plan
+                self.metrics.counter("pipeline_prebuilt_plans").inc()
+            else:
+                self.metrics.counter("pipeline_prebuilt_stale").inc()
+        if plan is None:
+            plan = self.kv.translation_plan(pairs)
+        res = self.kv.table.execute(plan, force_kernel=True).results
+        phys = [None if v is None else v - 1 for v in res]
         tables: Dict[int, List[Optional[int]]] = {r.rid: [] for r in self.running}
         for (rid, _), p in zip(pairs, phys):
             tables[rid].append(p)
@@ -488,12 +525,22 @@ class Server:
         self.metrics.counter("page_translations").inc(len(pairs))
         self.metrics.counter("translation_batches").inc()
 
-    def step(self, max_len: int = 128) -> None:
+    def step(self, max_len: int = 128, *, pipelined: bool = False) -> None:
         """One scheduler tick: admit + decode one token for all running.
         Admission drains the queue up to the batch limit and commits
-        the whole admission's metadata with one plan per index."""
+        the whole admission's metadata with one plan per index.
+
+        ``pipelined=True`` enables the double-buffered tick: snapshot
+        re-exports dirtied by this tick's admission run as deferred
+        jobs at the tick's *tail* (``AsyncExporter`` — epoch-guarded,
+        so the next read wave serves either the old or the complete
+        new export), and next tick's translation plan is pre-built and
+        pre-scheduled while this tick's results are already out.
+        Verified result-identical to the blocking path — only the
+        placement of the export/build work moves."""
         with _OBS.span("serve.tick", queued=len(self.queue),
                        running=len(self.running)):
+            self.metrics.gauge("admit_queue_depth").set(len(self.queue))
             admits = self._pop_admits(self.max_batch - len(self.running))
             served = False
             if admits:
@@ -501,7 +548,7 @@ class Server:
                 self.running.extend(admitted)
                 served |= bool(admitted)
             if self.running:
-                self._resolve_page_tables()
+                self._resolve_page_tables(pipelined=pipelined)
             finished = []
             with _OBS.span("serve.decode", width=len(self.running)):
                 for req in self.running:
@@ -523,7 +570,29 @@ class Server:
                 self.page_tables.pop(req.rid, None)
             if served:
                 self._first_service()
+            if pipelined:
+                self._pipeline_tail()
             self.sync_probe_stats()
+
+    def _pipeline_tail(self) -> None:
+        """Tail of a pipelined tick: run the deferred re-exports the
+        tick dirtied (block table grants, prefix ingests) and pre-build
+        next tick's translation plan — all after this tick's tokens are
+        already out, so the next tick's read waves start warm."""
+        with _OBS.span("serve.pipeline_tail"):
+            self.exporter.submit_if_stale(self.kv.table)
+            self.exporter.submit_if_stale(self.kv.prefix)
+            self.exporter.run_pending()
+            if self.running:
+                pairs = self._translation_pairs()
+                plan = self.kv.translation_plan(pairs)
+                plan.arrays()
+                plan.waves()
+                self._prebuilt = (pairs, plan)
+            else:
+                self._prebuilt = None
+            self.metrics.gauge("pipeline_depth").set(
+                1 if self._prebuilt is not None else 0)
 
     def sync_probe_stats(self) -> None:
         """Fold the PM indexes' cumulative probe-traffic counters
@@ -553,12 +622,13 @@ class Server:
         self._recover_t0 = None
 
     def run_until_drained(self, max_len: int = 128,
-                          max_ticks: int = 1000) -> List[Request]:
+                          max_ticks: int = 1000, *,
+                          pipelined: bool = False) -> List[Request]:
         done: List[Request] = []
         ticks = 0
         while (self.queue or self.running) and ticks < max_ticks:
             before = {r.rid for r in self.running}
-            self.step(max_len)
+            self.step(max_len, pipelined=pipelined)
             ticks += 1
             done.extend(r for r in self.running if r.done)
         return done
@@ -572,6 +642,12 @@ class Server:
         first post-restart admissions probe a warm snapshot."""
         self._recover_t0 = time.perf_counter_ns()
         with _OBS.span("serve.recover"):
+            # staged pipeline work dies with the power: queued re-export
+            # jobs are discarded (the epoch guard would reject their
+            # builds anyway — the crash count moved) and the pre-built
+            # next-tick plan is dropped with the running set it assumed
+            self.exporter.discard_pending()
+            self._prebuilt = None
             self.pmem.crash(mode="powerfail")
             self.metrics.gauge("warm_prefixes_restored").set(
                 self.kv.recover())

@@ -384,3 +384,100 @@ def test_server_stats_mirror_stream_deferrals_exactly():
     assert drv.stats["deferred_plans"] > 0
     for name in drv.MIRRORED:
         assert server.stats[f"stream_{name}"] == drv.stats[name], name
+
+
+# ---------------------------------------------------------------------------
+# pipelined-runtime gauges: exact attribution into the registry
+# ---------------------------------------------------------------------------
+
+
+def _stale_export(idx, salt=50):
+    """Export, then invalidate via a batched write wave — the snapshot
+    object survives (only its epoch key moves), which is the state the
+    async exporter refreshes.  ``salt`` varies the written values: an
+    update to a key's current value is a no-op and would leave the
+    epoch (correctly) untouched."""
+    idx.snapshot()
+    idx.execute(Plan.from_ops([("update", k, k + salt) for k in (1, 2, 3)]),
+                force_kernel=True, collect_results=False)
+
+
+def test_async_export_backlog_gauge_exact():
+    from repro.serving import AsyncExporter
+    reg = MetricsRegistry()
+    ex = AsyncExporter(metrics=reg)
+    view = MetricsView(reg)
+    assert view["async_export_backlog"] == 0
+    idxs = []
+    for _ in range(2):
+        idx = PCLHT(PMem(), n_buckets=16)
+        for k in (1, 2, 3):
+            idx.insert(k, k)
+        _stale_export(idx)
+        assert ex.submit_if_stale(idx)
+        idxs.append(idx)
+    assert view["async_export_backlog"] == ex.backlog == 2
+    assert view["async_exports_submitted"] == 2
+    assert ex.run_pending() == 2
+    assert view["async_export_backlog"] == 0
+    assert view["async_exports_published"] == 2
+    # the crash path drains the gauge too, without publishing anything
+    _stale_export(idxs[0], salt=70)
+    assert ex.submit_if_stale(idxs[0])
+    assert view["async_export_backlog"] == 1
+    assert ex.discard_pending() == 1
+    assert view["async_export_backlog"] == 0
+    assert view["async_exports_discarded"] == 1
+    assert view["async_exports_published"] == 2
+
+
+def test_pipeline_depth_gauge_and_counters_exact():
+    import time as _time
+
+    from repro.serving import PlanPipeline
+
+    class _Slow:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def execute(self, *a, **kw):
+            _time.sleep(0.005)
+            return self._inner.execute(*a, **kw)
+
+        def __getattr__(self, name):
+            return getattr(self._inner, name)
+
+    idx = PCLHT(PMem(), n_buckets=16)
+    for k in range(1, 9):
+        idx.insert(k, k)
+    reg = MetricsRegistry()
+    view = MetricsView(reg)
+    with PlanPipeline(_Slow(idx), depth=4, metrics=reg) as pipe:
+        for i in range(8):
+            pipe.submit(Plan.from_ops([("lookup", 1 + i % 8, 0)]))
+        pipe.drain()
+        stats = dict(pipe.stats)
+    # registry view equals the pipeline's own counters, name for name
+    assert view["pipeline_plans"] == stats["plans"] == 8
+    assert view["pipeline_stalls"] == stats["stalls"]
+    assert view["pipeline_coalesced_plans"] == stats["coalesced_plans"]
+    # the gauge records the high-water queue depth exactly
+    assert view["pipeline_depth"] == stats["max_depth"] >= 1
+
+
+def test_server_admit_queue_depth_gauge_exact():
+    """The admission gauge is set from the queue length at the top of
+    every tick — verified on a model-free server (max_batch=0 admits
+    nothing, so step() never touches the stub model)."""
+    from repro.serving.engine import Server
+    server = Server(_StubModel(), params=None, max_batch=0,
+                    page_size=8, n_pages=32)
+    assert server.stats["admit_queue_depth"] == 0
+    for i in range(3):
+        server.submit([1, 2, 3, 4], max_new=2)
+    server.step(16)
+    assert server.stats["admit_queue_depth"] == 3
+    assert len(server.queue) == 3  # nothing admitted at max_batch=0
+    server.submit([1, 2, 3, 4], max_new=2)
+    server.step(16)
+    assert server.stats["admit_queue_depth"] == 4

@@ -128,6 +128,68 @@ def test_prefix_lookup_batches_all_blocks(served):
     assert pages == [10, 11]
 
 
+def _submit_workload(server, cfg, seed=4, n_reqs=4):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_reqs):
+        server.submit([int(t) for t in rng.integers(1, cfg.vocab, 16)],
+                      max_new=6)
+
+
+def test_pipelined_step_token_identical_to_blocking(served):
+    """pipelined=True moves snapshot re-exports and next-tick plan
+    builds off the critical path but must not change a single served
+    token: same prompts, same outputs, and the pre-built translation
+    plans actually got used."""
+    cfg, _, _ = served
+    blocking = _server(served)
+    _submit_workload(blocking, cfg)
+    reqs_b = list(blocking.queue)
+    blocking.run_until_drained(max_len=48)
+
+    pipelined = _server(served)
+    _submit_workload(pipelined, cfg)
+    reqs_p = list(pipelined.queue)
+    pipelined.run_until_drained(max_len=48, pipelined=True)
+
+    assert all(r.done for r in reqs_b) and all(r.done for r in reqs_p)
+    assert [r.out for r in reqs_p] == [r.out for r in reqs_b], \
+        "pipelined ticks changed served tokens"
+    assert pipelined.stats["decode_steps"] == blocking.stats["decode_steps"]
+    assert pipelined.stats["page_translations"] == \
+        blocking.stats["page_translations"]
+    # the double buffer did real work: steady ticks ran the pre-built
+    # plan, and stale rebuilds only happen when admission changes the
+    # running set
+    assert pipelined.stats["pipeline_prebuilt_plans"] > 0
+    assert blocking.stats["pipeline_prebuilt_plans"] == 0
+
+
+def test_crash_mid_pipelined_traffic_recovers(served):
+    """Powerfail between pipelined ticks: staged exporter jobs and the
+    pre-built next-tick plan die with the power, and the engine still
+    drains the remaining work to completion on the recovered image."""
+    cfg, _, _ = served
+    pmem = PMem()
+    server = _server(served, pmem=pmem)
+    _submit_workload(server, cfg, seed=6, n_reqs=3)
+    server.step(48, pipelined=True)  # admission + first pipelined tick
+    assert server._prebuilt is not None
+    n_running = len(server.running)
+    assert n_running > 0
+
+    server.crash_and_recover()
+    assert server._prebuilt is None, "pre-built plan must not survive"
+    assert server.exporter.backlog == 0, "staged exports must be discarded"
+    assert server.running == [] and server.caches == {}
+    # committed prefix metadata survived: re-running the same prompts
+    # to completion works on the recovered metadata plane
+    _submit_workload(server, cfg, seed=6, n_reqs=3)
+    reqs = list(server.queue)
+    server.run_until_drained(max_len=48, pipelined=True)
+    assert all(r.done for r in reqs)
+    assert all(len(r.out) >= r.max_new for r in reqs)
+
+
 def test_multi_session_round_robin_admission(served):
     """Concurrent client sessions share one admission plane: the
     per-tick budget drains every connected session's FIFO round-robin,

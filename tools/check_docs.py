@@ -19,7 +19,10 @@ Fails (exit 1) when:
   (samplers, string-key encoding, deferral metric, crash sweep);
 * docs/PMEM_MODEL.md stops documenting the fingerprint-lane /
   optimistic-read surface (fp64, pm_load_words, validation_points) or
-  docs/ARCHITECTURE.md drops the kernel-table fp rows.
+  docs/ARCHITECTURE.md drops the kernel-table fp rows;
+* docs/RECOVERY.md stops documenting the instant-recovery SLO surface
+  (the chaos-harness metrics, the DRAM-rebuild baseline) or
+  docs/ARCHITECTURE.md drops the pipelined-tick section.
 """
 
 from __future__ import annotations
@@ -35,7 +38,7 @@ README_REQUIRED = ("probe", "clht_probe", "art_probe", "scan", "partition",
 TOP_DOCS_REQUIRED = ("README.md", "docs/ARCHITECTURE.md",
                      "docs/PMEM_MODEL.md", "docs/API.md",
                      "docs/OBSERVABILITY.md", "docs/SHARDING.md",
-                     "docs/WORKLOADS.md")
+                     "docs/WORKLOADS.md", "docs/RECOVERY.md")
 # the public-surface anchors docs/API.md must keep documenting
 API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
                    "open_index", "lookup_batch", "scan_batch",
@@ -43,7 +46,15 @@ API_DOC_ANCHORS = ("execute", "Plan", "Session", "pipeline",
 # the telemetry surface docs/OBSERVABILITY.md must keep documenting
 OBS_DOC_ANCHORS = ("obs.span", "plan.wave", "pmem.group_commit",
                    "recovery.time_to_first_served", "MetricsRegistry",
-                   "Histogram", "--trace")
+                   "Histogram", "--trace", "pipeline_depth",
+                   "admit_queue_depth", "async_export_backlog",
+                   "pipeline.coalesce")
+# the recovery-SLO surface docs/RECOVERY.md must keep documenting
+RECOVERY_DOC_ANCHORS = ("time_to_first_served_us", "warm_prefix_hit_rate",
+                        "requests_lost", "requests_replayed",
+                        "dram_rebuild_us", "instant_recovery_speedup",
+                        "group_commit_boundaries", "AsyncExporter",
+                        "crash_and_recover", "--smoke")
 # the scale-out surface docs/SHARDING.md must keep documenting
 SHARDING_DOC_ANCHORS = ("ShardedIndex", "split_by_shard", "StreamDriver",
                         "crash_shard", "recover_shard", "mesh_lookup",
@@ -62,7 +73,8 @@ PMEM_DOC_ANCHORS = ("fp64", "fp_partial", "FP_EMPTY", "pm_load_words",
 # the kernel map docs/ARCHITECTURE.md must keep documenting
 ARCH_DOC_ANCHORS = ("fingerprint lane", "probe64_fp", "leaf_fp",
                     "_optimistic_lookup", "_write_batch",
-                    "_shard_refine")
+                    "_shard_refine", "PlanPipeline", "AsyncExporter",
+                    "submit_if_stale", "pipelined=True")
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 KERNEL_REF_RE = re.compile(r"\bkernels/([A-Za-z0-9_]+)")
@@ -134,6 +146,13 @@ def main() -> int:
             if anchor not in wl_text:
                 errors.append(f"docs/WORKLOADS.md no longer documents "
                               f"{anchor!r} (matrix-surface drift)")
+    rec_doc = ROOT / "docs" / "RECOVERY.md"
+    if rec_doc.exists():
+        rec_text = rec_doc.read_text()
+        for anchor in RECOVERY_DOC_ANCHORS:
+            if anchor not in rec_text:
+                errors.append(f"docs/RECOVERY.md no longer documents "
+                              f"{anchor!r} (recovery-SLO drift)")
     pmem_doc = ROOT / "docs" / "PMEM_MODEL.md"
     if pmem_doc.exists():
         pmem_text = pmem_doc.read_text()
